@@ -1,0 +1,142 @@
+"""Fig 4 — strong/weak scaling, balanced vs unbalanced, MR-1S vs MR-2S.
+
+Paper numbers to reproduce (Tegner, PUMA-Wikipedia):
+  4a strong/balanced:    MR-1S ≈ +4.8% at ≤64 procs, loses at 256
+  4b weak/balanced:      ≈0.5% apart
+  4c strong/unbalanced:  MR-1S ≈ +20.4% average
+  4d weak/unbalanced:    MR-1S ≈ +23.1% average, peak 33.9%
+
+Output per cell: calibrated-model times at the paper's process counts +
+real wall-times at P=2..8 (single-core caveat in common.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import Costs, calibrate, run_py, save_json, simulate
+from repro.data.corpus import imbalance_repeats
+
+PAPER_PROCS = [16, 32, 64, 128, 256]
+HOT_FACTOR = 8           # hot ranks compute each task 8x (paper footnote 5)
+HOT_FRACTION = 0.125
+
+
+REAL_CODE = """
+import json, time
+import numpy as np
+from repro.core.wordcount import WordCount
+from repro.data.corpus import imbalance_repeats, synth_corpus
+
+P = {n_procs}
+N = {n_tokens}
+VOCAB = 65536
+task = 4096
+tokens = synth_corpus(N, VOCAB, seed=0)
+from repro.core.planner import plan_input
+T = plan_input(N, task, P).tasks_per_proc
+reps = imbalance_repeats(P, T, mode={mode!r}, hot_factor=8,
+                         hot_fraction=0.125)
+out = {{}}
+for backend in ("1s", "2s"):
+    job = WordCount(backend=backend)
+    job.init(tokens, vocab=VOCAB, task_size=task, push_cap=1024, n_procs=P,
+             repeats=reps)
+    job.run()                       # compile + correctness
+    t0 = time.perf_counter()
+    job.run()
+    out[backend] = time.perf_counter() - t0
+print(json.dumps(out))
+"""
+
+
+def real_times(n_procs: int, n_tokens: int, mode: str) -> Dict[str, float]:
+    import json
+    out = run_py(REAL_CODE.format(n_procs=n_procs, n_tokens=n_tokens,
+                                  mode=mode), n_devices=n_procs)
+    return json.loads(out.strip().splitlines()[-1])
+
+
+def model_row(costs: Costs, P: int, T: int, mode: str) -> Dict:
+    reps = imbalance_repeats(P, T, mode=mode, hot_factor=HOT_FACTOR,
+                             hot_fraction=HOT_FRACTION)
+    t2 = simulate(costs, reps, "2s")
+    t1 = simulate(costs, reps, "1s")
+    return {"P": P, "T": T, "mode": mode, "t_2s": t2, "t_1s": t1,
+            "improvement_pct": 100 * (1 - t1 / t2)}
+
+
+def run(quick: bool = False) -> Dict:
+    print("[fig4] calibrating per-op costs...")
+    calib = calibrate()
+    costs_cpu = Costs.from_calibration(calib)
+    rec: Dict = {"calibration": calib, "model": {}, "real": {},
+                 "tpu_projection": {}}
+
+    # --- calibrated model at the paper's scales -------------------------
+    T_STRONG = 512                      # fixed dataset: tasks shrink with P
+    for fig, mode, weak in (("4a", "balanced", False),
+                            ("4b", "balanced", True),
+                            ("4c", "unbalanced", False),
+                            ("4d", "unbalanced", True)):
+        rows: List[Dict] = []
+        for P in PAPER_PROCS:
+            T = 32 if weak else max(2, T_STRONG // P)
+            rows.append(model_row(costs_cpu, P, T, mode))
+        rec["model"][fig] = rows
+        avg = float(np.mean([r["improvement_pct"] for r in rows]))
+        peak = float(np.max([r["improvement_pct"] for r in rows]))
+        rec["model"][fig + "_summary"] = {"avg_pct": avg, "peak_pct": peak}
+        print(f"[fig4] {fig} ({mode}, {'weak' if weak else 'strong'}): "
+              f"model avg {avg:+.1f}% peak {peak:+.1f}%")
+
+    # --- TPU-parameterized projection (v5e constants) --------------------
+    for fig, mode, weak in (("4b", "balanced", True),
+                            ("4d", "unbalanced", True)):
+        rows = []
+        for P in PAPER_PROCS:
+            c = Costs.tpu_like(n_procs=P)
+            T = 32
+            reps = imbalance_repeats(P, T, mode=mode, hot_factor=HOT_FACTOR,
+                                     hot_fraction=HOT_FRACTION)
+            rows.append({"P": P,
+                         "improvement_pct": 100 * (
+                             1 - simulate(c, reps, "1s")
+                             / simulate(c, reps, "2s"))})
+        rec["tpu_projection"][fig] = rows
+
+    # --- win vs imbalance degree (the mechanism, isolated) ----------------
+    for mode in ("unbalanced", "random"):
+        rows = []
+        for hf in (1, 2, 4, 8, 16):
+            reps = imbalance_repeats(64, 32, mode=mode, hot_factor=hf,
+                                     hot_fraction=HOT_FRACTION, seed=1)
+            t2 = simulate(costs_cpu, reps, "2s")
+            t1 = simulate(costs_cpu, reps, "1s")
+            rows.append({"hot_factor": hf,
+                         "improvement_pct": 100 * (1 - t1 / t2)})
+        rec["model"][f"win_vs_imbalance_{mode}"] = rows
+        print(f"[fig4] win vs hot_factor ({mode}):",
+              [(r["hot_factor"], round(r["improvement_pct"], 1))
+               for r in rows])
+
+    # --- real wall-times (small P; single-core caveat) -------------------
+    procs = [2, 4, 8] if not quick else [4]
+    n_tok = 2_000_000 if not quick else 500_000
+    for mode in ("balanced", "unbalanced"):
+        rows = []
+        for P in procs:
+            t = real_times(P, n_tok, mode)
+            rows.append({"P": P, **t,
+                         "improvement_pct": 100 * (1 - t["1s"] / t["2s"])})
+            print(f"[fig4] real P={P} {mode}: 2s={t['2s']:.2f}s "
+                  f"1s={t['1s']:.2f}s ({rows[-1]['improvement_pct']:+.1f}%)")
+        rec["real"][mode] = rows
+
+    save_json("fig4_scaling.json", rec)
+    return rec
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,149 @@
+"""§Roofline — three-term roofline per (arch × shape) from the dry-run.
+
+    compute    = HLO_FLOPs_per_device / 197e12        (bf16 peak, v5e)
+    memory     = HLO_bytes_per_device / 819e9         (HBM bw)
+    collective = wire_bytes_per_device / 50e9         (1 ICI link)
+
+FLOPs/bytes come from the calibrated (unrolled, differenced, extrapolated)
+lowerings — DESIGN.md §9; collective wire bytes from the partitioned HLO
+(ring factors applied in hlo_stats). MODEL_FLOPS = 6·N_active·D tokens
+(+ attention term) per device.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from benchmarks.common import RESULTS, save_json
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+CHIPS = 256                        # single-pod roofline (the table's mesh)
+
+
+def model_flops_per_device(arch: str, shape_name: str) -> float:
+    """6·N_active·D (+ attention term) per device, per step.
+
+    The attention term uses the *visible* KV extent (SWA window; causal
+    half for full attention) and counts only layers that actually carry
+    attention (hybrid stacks)."""
+    from repro.config import SHAPES
+    from repro.configs.registry import get_config
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    N = cfg.active_param_count()
+    S = shape.seq_len
+    n_attn = sum(cfg.is_attn_layer(i) for i in range(cfg.n_layers)) \
+        if cfg.n_heads else 0
+    hd_eff = cfg.n_heads * cfg.d_head          # q·kᵀ + p·v width
+    if cfg.attn_type == "swa" and cfg.sliding_window:
+        kv_extent = min(S, cfg.sliding_window)
+        attn_tok = S * kv_extent               # banded
+    else:
+        kv_extent = S
+        attn_tok = S * S / 2                   # causal half
+    if shape.kind == "train":
+        tokens = shape.global_batch * S
+        flops = 6.0 * N * tokens
+        if n_attn:
+            flops += 12.0 * attn_tok * hd_eff * n_attn * shape.global_batch
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * S
+        flops = 2.0 * N * tokens
+        if n_attn:
+            flops += 4.0 * attn_tok * hd_eff * n_attn * shape.global_batch
+    else:                           # decode: one token per sequence
+        tokens = shape.global_batch
+        flops = 2.0 * N * tokens
+        if n_attn:
+            flops += (4.0 * kv_extent * hd_eff * n_attn
+                      * shape.global_batch)
+    return flops / CHIPS
+
+
+def load_cells(dryrun_dir: str, mesh: str = "singlepod") -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir,
+                                              f"*__{mesh}.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def roofline_row(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return {"arch": rec["arch"], "shape": rec["shape"],
+                "status": rec.get("status"),
+                "reason": rec.get("reason", rec.get("error", ""))[:200]}
+    cal = rec.get("calibration")
+    if cal:
+        flops = cal["flops_per_device"]
+        hbm = cal["hbm_bytes_per_device"]
+        coll = cal["collective_bytes_per_device"].get("total", 0.0)
+        coll_detail = {k: v for k, v in
+                       cal["collective_bytes_per_device"].items()
+                       if not k.startswith("n_")
+                       and not k.endswith("_result_bytes")}
+    else:
+        ca = rec["full"]["cost_analysis"]
+        flops = ca.get("flops", 0.0)
+        hbm = ca.get("bytes accessed", 0.0)
+        coll = rec["full"]["collectives"].get("total", 0.0)
+        coll_detail = {}
+    t_comp = flops / PEAK_FLOPS
+    t_mem = hbm / HBM_BW
+    t_coll = coll / LINK_BW
+    dom = max(("compute", t_comp), ("memory", t_mem),
+              ("collective", t_coll), key=lambda kv: kv[1])[0]
+    mf = model_flops_per_device(rec["arch"], rec["shape"])
+    mem_bytes = (rec["full"].get("memory_analysis") or {})
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "status": "ok",
+        "compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,
+        "dominant": dom,
+        "model_flops_per_dev": mf,
+        "useful_flops_ratio": mf / flops if flops else 0.0,
+        "roofline_fraction": (max(t_comp, 1e-30)
+                              / max(t_comp, t_mem, t_coll)),
+        "collective_detail": coll_detail,
+        "hlo_flops_per_dev": flops, "hbm_bytes_per_dev": hbm,
+        "coll_bytes_per_dev": coll,
+        "peak_dev_bytes": mem_bytes.get("peak_memory_in_bytes"),
+        "temp_dev_bytes": mem_bytes.get("temp_size_in_bytes"),
+        "arg_dev_bytes": mem_bytes.get("argument_size_in_bytes"),
+    }
+
+
+def fmt_s(x: float) -> str:
+    return f"{x*1e3:8.2f}ms" if x < 10 else f"{x:8.2f}s "
+
+
+def run(dryrun_dir: str = None, quick: bool = False) -> Dict:
+    dryrun_dir = dryrun_dir or os.path.join(RESULTS, "dryrun")
+    rows = [roofline_row(c) for c in load_cells(dryrun_dir)]
+    rows = [r for r in rows if r]
+    ok = [r for r in rows if r.get("status") == "ok"]
+    print(f"[roofline] {len(ok)} cells (singlepod) | "
+          f"{len(rows) - len(ok)} skipped/failed")
+    hdr = (f"{'arch':<28}{'shape':<13}{'compute':>11}{'memory':>11}"
+           f"{'collective':>11}  {'dominant':<11}{'useful':>7}{'roofl%':>7}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in sorted(ok, key=lambda r: (r['arch'], r['shape'])):
+        print(f"{r['arch']:<28}{r['shape']:<13}"
+              f"{fmt_s(r['compute_s'])}{fmt_s(r['memory_s'])}"
+              f"{fmt_s(r['collective_s'])}  {r['dominant']:<11}"
+              f"{r['useful_flops_ratio']:>7.2f}"
+              f"{100*r['roofline_fraction']:>6.1f}%")
+    rec = {"constants": {"peak_flops": PEAK_FLOPS, "hbm_bw": HBM_BW,
+                         "link_bw": LINK_BW, "chips": CHIPS},
+           "rows": rows}
+    save_json("roofline.json", rec)
+    return rec
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Benchmark harness entry point — one benchmark per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig4,...]
+
+Outputs land in results/*.json; the console shows the paper-comparison
+summaries EXPERIMENTS.md quotes.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller datasets / fewer repetitions")
+    ap.add_argument("--only", default="",
+                    help="comma list: fig4,fig5,fig6,fig7,roofline")
+    args = ap.parse_args(argv)
+    only = set(filter(None, args.only.split(",")))
+
+    from benchmarks import (fig4_scaling, fig5_ckpt, fig6_memory,
+                            fig7_timeline, moe_dispatch_bench, roofline)
+    benches = [("fig4", fig4_scaling.run), ("fig5", fig5_ckpt.run),
+               ("fig6", fig6_memory.run), ("fig7", fig7_timeline.run),
+               ("moe", moe_dispatch_bench.run),
+               ("roofline", lambda quick: roofline.run(quick=quick))]
+    failed = []
+    for name, fn in benches:
+        if only and name not in only:
+            continue
+        print(f"\n===== {name} =====")
+        t0 = time.time()
+        try:
+            fn(quick=args.quick)
+            print(f"[{name}] done in {time.time()-t0:.1f}s")
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"\nFAILED: {failed}")
+        sys.exit(1)
+    print("\nall benchmarks complete — results/*.json")
+
+
+if __name__ == "__main__":
+    main()

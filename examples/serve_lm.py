@@ -1,0 +1,24 @@
+"""Serve a small model with batched requests (prefill → batched decode).
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch deepseek-v2-lite-16b]
+"""
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-v2-lite-16b",
+                    help="any assigned arch id (smoke-sized config)")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    from repro.launch import serve as serve_mod
+    serve_mod.main(["--arch", args.arch, "--smoke",
+                    "--requests", str(args.requests),
+                    "--batch", "8", "--prompt-len", "32",
+                    "--new-tokens", str(args.new_tokens)])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""End-to-end driver: train an LM for a few hundred steps through the full
+production stack (config → sharded state → pipeline → decoupled-dispatch
+MoE → async checkpoints → restart).
+
+Default is a ~small MoE run that finishes on this CPU container in a few
+minutes; ``--full-100m`` selects a ~100M-parameter dense config (the
+deliverable's target scale — expect ~hours on 1 CPU core; on real
+accelerators the same flags run as-is).
+
+    PYTHONPATH=src python examples/train_lm.py
+    PYTHONPATH=src python examples/train_lm.py --full-100m --steps 300
+"""
+import argparse
+import sys
+
+sys.argv0 = sys.argv[0]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full-100m", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--dispatch", choices=["1s", "2s"], default="1s")
+    args = ap.parse_args()
+
+    from repro.launch import train as train_mod
+
+    if args.full_100m:
+        # olmo-family dense ~100M: 8L × d512 × ff2048, vocab 32k
+        argv = ["--arch", "olmo-1b", "--steps", str(args.steps),
+                "--batch", "8", "--seq", "256", "--devices", "8",
+                "--mesh", "4x2", "--vocab", "32000",
+                "--ckpt-dir", "/tmp/repro_train_100m", "--resume",
+                "--log-every", "10"]
+        # the smoke config is ~0.1M; scale it up via the full config's
+        # little sibling: use full olmo-1b but reduced seq/steps is still
+        # heavy on CPU — document the tradeoff, run the 100M variant
+        import dataclasses
+        from repro.configs import olmo_1b
+        olmo_1b.SMOKE = dataclasses.replace(
+            olmo_1b.SMOKE, n_layers=8, d_model=512, d_ff=2048,
+            n_heads=8, n_kv_heads=8, vocab_size=32_000)
+        argv.insert(0, "--smoke")
+        train_mod.main(argv)
+    else:
+        # llama4-family reduced MoE — exercises the paper's decoupled
+        # dispatch inside the train step (sized for the 1-core container;
+        # raise batch/seq/devices freely on real hardware)
+        train_mod.main([
+            "--arch", "llama4-maverick-400b-a17b", "--smoke",
+            "--steps", str(args.steps), "--batch", "4", "--seq", "64",
+            "--devices", "4", "--mesh", "2x2",
+            "--dispatch", args.dispatch,
+            "--ckpt-dir", "/tmp/repro_train_moe", "--resume",
+            "--log-every", "20"])
+
+
+if __name__ == "__main__":
+    main()

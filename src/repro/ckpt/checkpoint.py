@@ -1,0 +1,137 @@
+"""Async checkpointing — the MPI-storage-windows analogue.
+
+The paper's fault tolerance maps windows to storage and calls
+``MPI_Win_sync`` after each Map task / Reduce phase; the transfer itself
+overlaps compute, so the observed overhead is only ~4.8% (paper Fig 5).
+
+The JAX analogue: a snapshot *reference* (the pytree) is handed to a worker
+thread; the worker's ``device_get`` blocks until the async-dispatched device
+computation produces the values, while the main thread keeps enqueueing the
+next steps — transfer and compute overlap exactly as with storage windows.
+Manifest commit is an atomic rename, so a crash mid-write never corrupts the
+restore point. ``keep`` bounds disk usage; restore returns (step, tree).
+
+Works for both the MapReduce engine's window carries (fig5 benchmark) and
+the trainer's param/opt state (launch/train.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _leaf_key(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 2):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._pool = ThreadPoolExecutor(max_workers=1)
+        self._lock = threading.Lock()
+
+    # -- save ---------------------------------------------------------------
+
+    def save_async(self, step: int, tree: Any,
+                   extra: Optional[Dict] = None) -> Future:
+        """Non-blocking: the device_get happens in the worker thread, so it
+        overlaps whatever the main thread enqueues next (the storage-window
+        trick)."""
+        return self._pool.submit(self._save, step, tree, extra or {})
+
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None):
+        return self._save(step, tree, extra or {})
+
+    def _save(self, step: int, tree: Any, extra: Dict):
+        t0 = time.perf_counter()
+        flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+        arrays = {_leaf_key(path): np.asarray(jax.device_get(leaf))
+                  for path, leaf in flat}
+        tmp = os.path.join(self.dir, f".tmp-{step}")
+        final = os.path.join(self.dir, f"step-{step}")
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump({"step": step, "n_leaves": len(arrays),
+                       "extra": extra,
+                       "wall": time.perf_counter() - t0}, f)
+        with self._lock:
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)           # atomic commit
+            self._gc()
+        return final
+
+    def _gc(self):
+        steps = sorted(self.steps())
+        for s in steps[: max(0, len(steps) - self.keep)]:
+            shutil.rmtree(os.path.join(self.dir, f"step-{s}"),
+                          ignore_errors=True)
+
+    # -- restore ------------------------------------------------------------
+
+    def steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step-"):
+                if os.path.exists(os.path.join(self.dir, name,
+                                               "manifest.json")):
+                    out.append(int(name.split("-")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, tree_like: Any, step: Optional[int] = None,
+                shardings: Any = None) -> Tuple[int, Any, Dict]:
+        """tree_like provides structure; shardings (optional pytree of
+        NamedSharding) places leaves — restore onto a *different* mesh than
+        the one that saved is exactly the elastic-restart path."""
+        if step is None:
+            step = self.latest_step()
+        assert step is not None, f"no checkpoints in {self.dir}"
+        d = os.path.join(self.dir, f"step-{step}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(d, "arrays.npz"))
+        flat = jax.tree_util.tree_flatten_with_path(tree_like)
+        leaves = []
+        for path, like in flat[0]:
+            arr = data[_leaf_key(path)]
+            want = np.dtype(like.dtype)
+            if arr.dtype != want:
+                # npz round-trips ml_dtypes (bf16 etc.) as raw void bytes —
+                # reinterpret when widths match, else cast
+                arr = (arr.view(want) if arr.dtype.itemsize == want.itemsize
+                       and arr.dtype.kind == "V" else arr.astype(want))
+            leaves.append(arr)
+        tree = jax.tree_util.tree_unflatten(flat[1], leaves)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), tree, shardings)
+        else:
+            tree = jax.tree.map(jax.device_put, tree)
+        return step, tree, manifest.get("extra", {})
+
+    def wait(self):
+        self._pool.shutdown(wait=True)
+        self._pool = ThreadPoolExecutor(max_workers=1)

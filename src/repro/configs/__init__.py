@@ -1,0 +1,5 @@
+"""Assigned-architecture configs. ``get_config(arch_id)`` resolves the exact
+public config; ``get_smoke_config(arch_id)`` a reduced same-family variant for
+CPU smoke tests; ``ARCH_IDS`` lists all ten assigned ids."""
+from repro.configs.registry import (ARCH_IDS, get_config, get_smoke_config,
+                                    shape_cells, runnable_cells)

@@ -1,0 +1,64 @@
+"""Arch registry + cell matrix.
+
+``runnable_cells()`` enumerates every assigned (arch × shape) pair, applying
+the brief's skip rules:
+  * ``long_500k`` needs sub-quadratic attention → runs only for SSM/hybrid/
+    SWA archs (mamba2, jamba, h2o-danube); skipped for the 7 pure
+    full-attention archs (recorded, not silently dropped).
+  * every arch here has a decode path (whisper decodes as enc-dec), so no
+    decode-shape skips apply.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List, Tuple
+
+from repro.config import SHAPES, ModelConfig, ShapeConfig
+
+_MODULES = {
+    "llama4-maverick-400b-a17b": "repro.configs.llama4_maverick",
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite",
+    "stablelm-12b": "repro.configs.stablelm_12b",
+    "olmo-1b": "repro.configs.olmo_1b",
+    "h2o-danube-1.8b": "repro.configs.h2o_danube",
+    "codeqwen1.5-7b": "repro.configs.codeqwen_7b",
+    "whisper-tiny": "repro.configs.whisper_tiny",
+    "internvl2-26b": "repro.configs.internvl2_26b",
+    "jamba-v0.1-52b": "repro.configs.jamba_52b",
+    "mamba2-780m": "repro.configs.mamba2_780m",
+}
+
+ARCH_IDS: List[str] = list(_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return importlib.import_module(_MODULES[arch_id]).CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    return importlib.import_module(_MODULES[arch_id]).SMOKE
+
+
+def shape_cells() -> Dict[str, ShapeConfig]:
+    return dict(SHAPES)
+
+
+def cell_status(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """(runnable, reason)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("long_500k requires sub-quadratic attention; "
+                       f"{cfg.name} is pure full-attention (skip recorded "
+                       "in DESIGN.md)")
+    return True, ""
+
+
+def runnable_cells(include_skips: bool = False):
+    """Yield (arch_id, shape_name, runnable, reason)."""
+    out = []
+    for arch_id in ARCH_IDS:
+        cfg = get_config(arch_id)
+        for sname, shape in SHAPES.items():
+            ok, why = cell_status(cfg, shape)
+            if ok or include_skips:
+                out.append((arch_id, sname, ok, why))
+    return out

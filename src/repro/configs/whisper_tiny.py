@@ -1,0 +1,40 @@
+"""whisper-tiny [audio] — 4L d_model=384 6H d_ff=1536 vocab=51865, enc-dec,
+conv frontend (stub). [arXiv:2212.04356; unverified]
+
+The conv1d frame frontend is a STUB: ``input_specs()`` provides precomputed
+(B, S_enc, 384) frame embeddings (S_enc = seq_len // 2, matching whisper's
+2x conv downsampling). Positional encoding is RoPE here (hardware-adaptation
+note in DESIGN.md: whisper's learned/sinusoidal embeddings are replaced by
+the stack's uniform RoPE — structure and cost identical).
+"""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="audio",
+    n_layers=4,
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=6,
+    d_ff=1536,
+    vocab_size=51_865,
+    norm_type="layernorm",
+    n_enc_layers=4,
+    enc_seq_factor=2,
+    frontend="audio_stub",
+)
+
+SMOKE = ModelConfig(
+    name="whisper-smoke",
+    family="audio",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    vocab_size=256,
+    norm_type="layernorm",
+    n_enc_layers=2,
+    enc_seq_factor=2,
+    frontend="audio_stub",
+)

@@ -1,0 +1,4 @@
+# The paper's primary contribution: the decoupled (one-sided) MapReduce
+# engine and its bulk-synchronous reference, as composable JAX modules.
+from repro.core.api import JobSpec, MapReduceJob
+from repro.core.wordcount import WordCount, wordcount_oracle

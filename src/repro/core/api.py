@@ -1,0 +1,101 @@
+"""Public MapReduce API — mirrors the paper's class hierarchy (Listing 1).
+
+  * Base class  -> :class:`MapReduceJob` (Init / Run / Print / Finalize)
+  * Back-end    -> ``backend="1s" | "2s"`` (core.onesided / core.twosided)
+  * Use-case    -> subclass providing ``map_task`` (+ optional
+                   ``reduce_local`` — the default fuses it into Map, as the
+                   paper does)
+
+Example (paper Listing 1 analogue)::
+
+    job = WordCount(backend="1s")
+    job.init(tokens, vocab=VOCAB, task_size=4096, push_cap=512, n_procs=8)
+    result = job.run()
+    job.print_result()
+    job.finalize()
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import planner
+from repro.core.kv import KEY_SENTINEL
+
+
+@dataclass(frozen=True)
+class JobSpec:
+    """Static engine settings (paper: Init(filename, win_size, chunk_size,
+    task_size, ...))."""
+    vocab: int                   # dense Key-Value window size ("win_size")
+    task_size: int               # elements per Map task
+    push_cap: int                # records per one-sided push per owner
+                                 #   ("maximum bytes per one-sided operation")
+    n_procs: int
+    combine_capacity: int = 0    # 0 -> vocab
+    segment: int = 0             # checkpoint segment (tasks between syncs)
+
+    def __post_init__(self):
+        if not self.combine_capacity:
+            object.__setattr__(self, "combine_capacity", self.vocab)
+
+
+class MapReduceJob:
+    """Base class: wiring between use-case, back-end and the mesh."""
+
+    def __init__(self, backend: str = "1s"):
+        assert backend in ("1s", "2s"), backend
+        self.backend = backend
+        self._compiled = None
+        self.spec: Optional[JobSpec] = None
+
+    # -- use-case hooks -----------------------------------------------------
+    def map_task(self, task_tokens: jnp.ndarray, repeat: jnp.ndarray):
+        """-> (keys, values) fixed-length arrays. Override per use case."""
+        raise NotImplementedError
+
+    # -- lifecycle ----------------------------------------------------------
+    def init(self, tokens: np.ndarray, *, vocab: int, task_size: int,
+             push_cap: int, n_procs: int, mesh=None, repeats=None,
+             segment: int = 0):
+        from repro.distributed.mesh import local_mesh
+        self.spec = JobSpec(vocab=vocab, task_size=task_size,
+                            push_cap=push_cap, n_procs=n_procs,
+                            segment=segment)
+        self.mesh = mesh if mesh is not None else local_mesh(
+            (n_procs,), ("procs",))
+        self.plan = planner.plan_input(len(tokens), task_size, n_procs)
+        self._tokens = planner.shard_tasks(np.asarray(tokens, np.int32),
+                                           self.plan)
+        T = self.plan.tasks_per_proc
+        if repeats is None:
+            repeats = np.ones((n_procs, T), np.int32)
+        self._repeats = np.asarray(repeats, np.int32).reshape(n_procs, T)
+        return self
+
+    def run(self):
+        from repro.core import onesided, twosided
+        runner = onesided.run_job if self.backend == "1s" else twosided.run_job
+        keys, vals = runner(self.spec, self.map_task, self.mesh,
+                            self._tokens, self._repeats)
+        self._result = (np.asarray(keys), np.asarray(vals))
+        return self._result
+
+    def result_dict(self):
+        keys, vals = self._result
+        valid = keys != int(KEY_SENTINEL)
+        return dict(zip(keys[valid].tolist(), vals[valid].tolist()))
+
+    def print_result(self, top: int = 10):
+        d = self.result_dict()
+        for k, v in sorted(d.items(), key=lambda kv: -kv[1])[:top]:
+            print(f"{k}\t{v}")
+
+    def finalize(self):
+        self._compiled = None
+        self._tokens = self._repeats = None

@@ -1,0 +1,48 @@
+"""Combine phase — tree-based merge of per-process sorted results.
+
+Paper §2.1 / Fig 3: ⌈log2(P)⌉ + 1 levels; level 0 is each process's local
+in-order records; at every further level, rank i+2^l sends its current run to
+rank i (one-sided get in the paper → ``collective_permute`` here) which merges
+the two sorted runs, summing duplicate keys (this also resolves the records
+whose ownership was transferred during Map overflow). After the last level,
+rank 0 holds the globally sorted result.
+
+MPI_LOCK_EXCLUSIVE has no analogue (and no need): SPMD lockstep already
+serializes levels.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.kv import merge_sorted
+
+
+def n_levels(n_procs: int) -> int:
+    return int(math.ceil(math.log2(max(n_procs, 2))))
+
+
+def tree_combine(keys, vals, axis: str, n_procs: int):
+    """Run the merge tree inside a shard_map region.
+
+    keys/vals: this process's sorted unique records, (W,), sentinel-padded.
+    Returns rank 0's final merged records (other ranks return their last
+    partial state — callers slice rank 0).
+    """
+    W = keys.shape[0]
+    rank = lax.axis_index(axis)
+    for level in range(n_levels(n_procs)):
+        stride = 1 << level
+        perm = [(i + stride, i) for i in range(0, n_procs, stride * 2)
+                if i + stride < n_procs]
+        rk = lax.ppermute(keys, axis, perm)
+        rv = lax.ppermute(vals, axis, perm)
+        # ppermute delivers zeros to non-receivers; treat key 0 as valid only
+        # on true receivers by masking the merge with receiver-ship.
+        is_receiver = (rank % (stride * 2) == 0) & (rank + stride < n_procs)
+        mk, mv = merge_sorted(keys, vals, rk, rv, W)
+        keys = jnp.where(is_receiver, mk, keys)
+        vals = jnp.where(is_receiver, mv, vals)
+    return keys, vals

@@ -1,0 +1,121 @@
+"""Key-value record machinery: hashing, ownership, sort-based local reduce.
+
+The paper encodes variable-length ``<h|key|value>`` records and owns each key
+by a 64-bit hash. On TPU we keep fixed-width int32 records (variable-length
+keys are resolved to ids by the ingest tokenizer — see DESIGN.md §2.1) and a
+bijective 32-bit mixing hash (Murmur3-style finalizer) for ownership, which
+preserves the paper's "uniformly spread keys across owners" property.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+KEY_SENTINEL = jnp.iinfo(jnp.int32).max  # marks an empty / invalid record
+
+
+def mix32(x: jnp.ndarray) -> jnp.ndarray:
+    """Murmur3 fmix32 — bijective on uint32."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def owner_of(keys: jnp.ndarray, n_procs: int) -> jnp.ndarray:
+    """hash(key) % P — the paper's ownership rule."""
+    return (mix32(keys) % jnp.uint32(n_procs)).astype(jnp.int32)
+
+
+def local_reduce(keys: jnp.ndarray, values: jnp.ndarray, capacity: int):
+    """Paper phase II (Local Reduce): aggregate duplicate keys.
+
+    Sorts by key and segment-sums, returning ``capacity`` records
+    (key ascending, KEY_SENTINEL padding). Pure jnp oracle for the
+    wordcount_hash kernel and the generic (unbounded-key) engine path.
+    """
+    order = jnp.argsort(keys)
+    sk = keys[order]
+    sv = values[order]
+    valid = sk != KEY_SENTINEL
+    # head of each run of equal keys
+    head = jnp.concatenate([jnp.ones((1,), bool), sk[1:] != sk[:-1]]) & valid
+    seg = jnp.cumsum(head) - 1                      # segment id per element
+    # ghost slot ``capacity`` for invalid / non-head writes, so slot
+    # capacity-1 is never clobbered when n_unique == capacity
+    seg = jnp.where(valid, seg, capacity)
+    sums = jnp.zeros((capacity + 1,), values.dtype).at[seg].add(
+        jnp.where(valid, sv, 0))
+    uk = jnp.full((capacity + 1,), KEY_SENTINEL, keys.dtype).at[
+        jnp.where(head, seg, capacity)
+    ].set(jnp.where(head, sk, KEY_SENTINEL))
+    n_unique = jnp.sum(head)
+    idx = jnp.arange(capacity)
+    uk = jnp.where(idx < n_unique, uk[:capacity], KEY_SENTINEL)
+    sums = jnp.where(idx < n_unique, sums[:capacity], 0)
+    return uk, sums, n_unique
+
+
+def local_reduce_repeated(keys, vals, capacity: int, rep):
+    """Paper footnote 5 imbalance model: the task is *computed* ``rep``
+    times while its input is read once; the result is identical for any
+    rep >= 1.
+
+    Each extra repetition re-runs a full local_reduce (the task's compute)
+    seeded with a value-preserving dependency on the previous iteration —
+    ``uv < 0`` is never true in value but XLA cannot prove it, so the loop
+    body can be neither CSE'd nor dead-code-eliminated."""
+    uk0, uv0, _ = local_reduce(keys, vals, capacity)
+
+    def body(i, carry):
+        uk, uv = carry
+        k_dep = jnp.where(uv < 0, uk, KEY_SENTINEL)
+        v_dep = jnp.where(uv < 0, uv, 0)
+        uk2, uv2, _ = local_reduce(jnp.concatenate([keys, k_dep]),
+                                   jnp.concatenate([vals, v_dep]), capacity)
+        return uk2, uv2
+
+    return lax.fori_loop(1, jnp.maximum(rep, 1), body, (uk0, uv0))
+
+
+def merge_sorted(keys_a, vals_a, keys_b, vals_b, capacity: int):
+    """Merge two key-ascending unique record arrays, summing duplicates."""
+    k = jnp.concatenate([keys_a, keys_b])
+    v = jnp.concatenate([vals_a, vals_b])
+    return local_reduce(k, v, capacity)[:2]
+
+
+def bucketize(keys, values, n_procs: int, cap: int):
+    """Scatter records into per-owner buckets — the paper's one-sided put
+    target layout: (P, cap) records + per-owner fill counts.
+
+    Records beyond ``cap`` for a hot owner are *dropped from the push* and
+    reported in ``overflow`` so the caller can retain them locally (the
+    paper's ownership-transfer semantics, footnote 2).
+    """
+    owners = owner_of(keys, n_procs)
+    valid = keys != KEY_SENTINEL
+    owners = jnp.where(valid, owners, n_procs)      # invalid -> ghost bucket
+    order = jnp.argsort(owners, stable=True)
+    so, sk, sv = owners[order], keys[order], values[order]
+    # position within its bucket
+    one = jnp.ones_like(so)
+    pos_in_owner = jnp.cumsum(one) - 1
+    start = jnp.searchsorted(so, jnp.arange(n_procs + 1))
+    pos = pos_in_owner - start[jnp.clip(so, 0, n_procs)]
+    counts = jnp.minimum(start[1:] - start[:-1], cap)[:n_procs]
+    in_cap = (pos < cap) & (so < n_procs)
+    flat_idx = jnp.where(in_cap, so * cap + pos, n_procs * cap)
+    bk = jnp.full((n_procs * cap + 1,), KEY_SENTINEL, keys.dtype).at[flat_idx].set(
+        jnp.where(in_cap, sk, KEY_SENTINEL)
+    )[:-1].reshape(n_procs, cap)
+    bv = jnp.zeros((n_procs * cap + 1,), values.dtype).at[flat_idx].set(
+        jnp.where(in_cap, sv, 0)
+    )[:-1].reshape(n_procs, cap)
+    overflow_k = jnp.where(in_cap | (so >= n_procs), KEY_SENTINEL, sk)
+    overflow_v = jnp.where(in_cap | (so >= n_procs), 0, sv)
+    return bk, bv, counts, (overflow_k, overflow_v)

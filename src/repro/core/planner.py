@@ -1,0 +1,62 @@
+"""Self-scheduled task planner — the paper's decentralized Map distribution.
+
+"Instead of following a master-slave approach, we design a mechanism that
+enables processes to decide the next task to perform based on the rank, task
+size, and file offset between tasks."  (paper §2.1)
+
+Tasks are fixed-size slices of the input. Rank r takes tasks
+{r, r+P, r+2P, ...} (round-robin by rank — no master, no coordination).
+The planner also owns straggler re-issue bookkeeping (ft/straggler.py) and
+the restart cursor for checkpointing.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class TaskPlan:
+    n_tasks: int
+    task_size: int
+    n_procs: int
+
+    @property
+    def tasks_per_proc(self) -> int:
+        return (self.n_tasks + self.n_procs - 1) // self.n_procs
+
+    def tasks_for_rank(self, rank: int) -> np.ndarray:
+        """Round-robin self-schedule; padded with -1 (no-op tasks)."""
+        ids = np.arange(rank, self.n_tasks, self.n_procs)
+        pad = self.tasks_per_proc - len(ids)
+        return np.concatenate([ids, -np.ones(pad, np.int64)]).astype(np.int32)
+
+    def file_offset(self, task_id: int) -> int:
+        """Byte/element offset of a task — the non-blocking I/O prefetch
+        target for the *next* task while the current one computes."""
+        return task_id * self.task_size
+
+
+def plan_input(n_elements: int, task_size: int, n_procs: int) -> TaskPlan:
+    n_tasks = (n_elements + task_size - 1) // task_size
+    # round up so every rank runs the same scan length (SPMD requirement)
+    return TaskPlan(n_tasks=n_tasks, task_size=task_size, n_procs=n_procs)
+
+
+def shard_tasks(tokens: np.ndarray, plan: TaskPlan):
+    """Host-side: build per-rank (tasks_per_proc, task_size) input blocks +
+    validity mask. Padding tasks are all-sentinel."""
+    from repro.core.kv import KEY_SENTINEL
+    n = plan.n_tasks * plan.task_size
+    flat = np.full((n,), int(KEY_SENTINEL), np.int32)
+    flat[: len(tokens)] = tokens
+    grid = flat.reshape(plan.n_tasks, plan.task_size)
+    out = np.full((plan.n_procs, plan.tasks_per_proc, plan.task_size),
+                  int(KEY_SENTINEL), np.int32)
+    for r in range(plan.n_procs):
+        ids = plan.tasks_for_rank(r)
+        for j, t in enumerate(ids):
+            if t >= 0:
+                out[r, j] = grid[t]
+    return out

@@ -1,0 +1,77 @@
+"""MapReduce-2S — the bulk-synchronous reference (Hoefler et al. [7]).
+
+Same Map / Local Reduce / mapping / bucket memory management as MR-1S (the
+paper keeps these identical on purpose), but:
+
+  * all Map tasks complete first, buffering *every* task's buckets
+    (this is why its memory footprint scales with total map output — Fig 6);
+  * one bulk all_to_all (MPI_Alltoallv analogue) shuffles everything after
+    the implicit barrier;
+  * Reduce runs as one post-shuffle spike;
+  * the Combine tree is shared with MR-1S (point-to-point in the paper; the
+    ppermute tree is the faithful analogue of both variants on TPU).
+
+Master-slave MPI_Scatter task distribution maps to the initial sharded
+device_put of the task grid (the host "master" owns placement).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.api import JobSpec
+from repro.core.combine import tree_combine
+from repro.core.kv import (KEY_SENTINEL, bucketize, local_reduce,
+                           local_reduce_repeated)
+from repro.core.windows import DenseWindow
+from repro.distributed.collectives import all_to_all_blocks
+
+AXIS = "procs"
+
+
+def _engine(spec: JobSpec, map_fn: Callable, tokens, repeats):
+    tokens, repeats = tokens[0], repeats[0]
+    P, cap = spec.n_procs, spec.push_cap
+    T = tokens.shape[0]
+
+    # ---- Map phase (all tasks; buckets buffered, nothing sent yet) --------
+    def map_one(_, xs):
+        task, rep = xs
+        keys, vals = map_fn(task, rep)
+        # same repeated task compute as MR-1S (the engines share the Map /
+        # Local Reduce mechanics by design — paper §2.2.1)
+        uk, uv = local_reduce_repeated(keys, vals, keys.shape[0], rep)
+        bk, bv, counts, (ofk, ofv) = bucketize(uk, uv, P, cap)
+        return None, (bk, bv, ofk, ofv)
+
+    _, (BK, BV, OFK, OFV) = lax.scan(map_one, None, (tokens, repeats))
+    # (T, P, cap) -> (P, T*cap): the full send buffer (the 2S memory spike)
+    BK = jnp.swapaxes(BK, 0, 1).reshape(P, T * cap)
+    BV = jnp.swapaxes(BV, 0, 1).reshape(P, T * cap)
+
+    # ---- barrier + bulk shuffle (MPI_Alltoallv) ---------------------------
+    RK = all_to_all_blocks(BK, AXIS)
+    RV = all_to_all_blocks(BV, AXIS)
+
+    # ---- Reduce (post-shuffle spike) --------------------------------------
+    win = DenseWindow(jnp.zeros((spec.vocab,), jnp.int32))
+    win = win.put(RK.reshape(-1), RV.reshape(-1))
+    win = win.put(OFK.reshape(-1), OFV.reshape(-1))   # overflow kept local
+
+    # ---- Combine ----------------------------------------------------------
+    keys, vals = win.to_records(None, P)
+    keys, vals = tree_combine(keys, vals, AXIS, P)
+    return keys[None], vals[None]
+
+
+def run_job(spec: JobSpec, map_fn: Callable, mesh, tokens, repeats):
+    from jax.sharding import PartitionSpec as P
+    fn = jax.jit(jax.shard_map(
+        partial(_engine, spec, map_fn), mesh=mesh,
+        in_specs=(P(AXIS), P(AXIS)), out_specs=(P(AXIS), P(AXIS))))
+    keys, vals = fn(tokens, repeats)
+    return jax.device_get(keys)[0], jax.device_get(vals)[0]

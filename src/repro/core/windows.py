@@ -1,0 +1,77 @@
+"""Window abstractions — the JAX analogue of the paper's MPI windows.
+
+The paper allocates four windows per process: Status, Key-Value, Combine and
+Displacement. On TPU these become preallocated device-resident arrays carried
+through the engine's scan:
+
+  * ``DenseWindow``   — the Key-Value window for bounded key spaces
+                        (wordcount over a known vocab): a dense accumulation
+                        table indexed by key. Remote "puts" land here via the
+                        chunked push shuffle.
+  * ``SortedWindow``  — the generic (unbounded keys) Key-Value window: a
+                        log-structured sorted-run table, merged incrementally.
+  * ``status``        — per-process phase/task cursor vector (observability,
+                        checkpoint manifest, ownership-transfer bookkeeping).
+  * fill ``counts``   — play the Displacement window's role (where the next
+                        record lands per bucket).
+
+STATUS codes mirror the paper's (e.g. ``STATUS_REDUCE``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core.kv import KEY_SENTINEL
+
+STATUS_INIT = 0
+STATUS_MAP = 1
+STATUS_REDUCE = 2
+STATUS_COMBINE = 3
+STATUS_DONE = 4
+
+
+class DenseWindow(NamedTuple):
+    """Dense Key-Value window: ``table[k]`` accumulates the value for key k
+    owned by this process (non-owned slots stay 0)."""
+    table: jnp.ndarray          # (vocab,) value dtype
+
+    @staticmethod
+    def alloc(vocab: int, dtype=jnp.int32) -> "DenseWindow":
+        return DenseWindow(jnp.zeros((vocab,), dtype))
+
+    def put(self, keys, values) -> "DenseWindow":
+        """Fold a chunk of records (the receive side of a one-sided put)."""
+        valid = keys != KEY_SENTINEL
+        idx = jnp.where(valid, keys, 0)
+        return DenseWindow(self.table.at[idx].add(jnp.where(valid, values, 0)))
+
+    def to_records(self, my_rank, n_procs):
+        """Sorted unique (key, value) records owned by this process."""
+        keys = jnp.arange(self.table.shape[0], dtype=jnp.int32)
+        valid = self.table != 0
+        return jnp.where(valid, keys, KEY_SENTINEL), jnp.where(valid, self.table, 0)
+
+
+class SortedWindow(NamedTuple):
+    """Generic Key-Value window: sorted unique runs, merged on arrival."""
+    keys: jnp.ndarray           # (capacity,) int32, KEY_SENTINEL padded
+    values: jnp.ndarray         # (capacity,)
+
+    @staticmethod
+    def alloc(capacity: int, dtype=jnp.int32) -> "SortedWindow":
+        return SortedWindow(
+            jnp.full((capacity,), KEY_SENTINEL, jnp.int32),
+            jnp.zeros((capacity,), dtype),
+        )
+
+    def put(self, keys, values) -> "SortedWindow":
+        from repro.core.kv import merge_sorted
+        k, v = merge_sorted(self.keys, self.values, keys, values,
+                            self.keys.shape[0])
+        return SortedWindow(k, v)
+
+
+def status_vector(n_procs: int) -> jnp.ndarray:
+    return jnp.full((n_procs,), STATUS_INIT, jnp.int32)

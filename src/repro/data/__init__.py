@@ -1,0 +1,3 @@
+from repro.data.corpus import synth_corpus, zipf_tokens
+from repro.data.tokenizer import HashTokenizer, Vocab
+from repro.data.pipeline import DoubleBufferedLoader, lm_batches

@@ -1,0 +1,60 @@
+"""Synthetic PUMA-like corpus.
+
+The paper evaluates on PUMA-Wikipedia Dataset3 (~300GB of Wikipedia text).
+Offline we synthesize the statistically relevant property — a Zipf word-law
+token stream — with controllable size, plus the paper's imbalance model
+(footnote 5: a task is *computed* r times while its input is read once).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+
+def zipf_tokens(n: int, vocab: int, a: float = 1.3, seed: int = 0,
+                dtype=np.int32) -> np.ndarray:
+    """Zipf-distributed token ids in [0, vocab). a≈1.3 matches natural text."""
+    rng = np.random.default_rng(seed)
+    return (rng.zipf(a, size=n) % vocab).astype(dtype)
+
+
+def synth_corpus(n_tokens: int, vocab: int, seed: int = 0) -> np.ndarray:
+    return zipf_tokens(n_tokens, vocab, seed=seed)
+
+
+def imbalance_repeats(n_procs: int, tasks_per_proc: int, *,
+                      mode: str = "balanced", hot_factor: int = 8,
+                      hot_fraction: float = 0.125,
+                      seed: int = 0) -> np.ndarray:
+    """Per-(rank, task) compute-repeat factors — the paper's workload knob.
+
+    balanced:    every task runs once.
+    unbalanced:  a ``hot_fraction`` of ranks runs each task ``hot_factor``
+                 times (the paper's "same task computed multiple times, input
+                 read once").
+    random:      per-task repeat ~ U{1, hot_factor} — irregular datasets.
+    """
+    reps = np.ones((n_procs, tasks_per_proc), np.int32)
+    if mode == "balanced":
+        return reps
+    if mode == "unbalanced":
+        n_hot = max(1, int(round(n_procs * hot_fraction)))
+        reps[:n_hot] = hot_factor
+        return reps
+    if mode == "random":
+        rng = np.random.default_rng(seed)
+        return rng.integers(1, hot_factor + 1,
+                            size=(n_procs, tasks_per_proc)).astype(np.int32)
+    raise ValueError(mode)
+
+
+def lm_token_stream(n_tokens: int, vocab: int, seed: int = 0) -> np.ndarray:
+    """Token stream for LM training examples (markov-flavoured Zipf so the
+    model has something learnable)."""
+    rng = np.random.default_rng(seed)
+    base = zipf_tokens(n_tokens, vocab, seed=seed)
+    # inject local structure: with p=0.3, repeat the previous token + 1
+    mask = rng.random(n_tokens) < 0.3
+    shifted = np.roll(base, 1) + 1
+    return np.where(mask, shifted % vocab, base).astype(np.int32)

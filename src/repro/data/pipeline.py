@@ -1,0 +1,66 @@
+"""Double-buffered host→device pipeline — the non-blocking-I/O analogue.
+
+The paper overlaps each Map task's compute with the *asynchronous retrieval
+of the next task's input* (non-blocking MPI I/O). On TPU the same role is
+played by dispatching ``jax.device_put`` for batch t+1 while batch t's step
+is still executing (JAX dispatch is async; the host thread runs ahead).
+``DoubleBufferedLoader`` keeps exactly one batch in flight.
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterator, Optional
+
+import jax
+import numpy as np
+
+
+class DoubleBufferedLoader:
+    """Wraps a host batch iterator; keeps the next device batch in flight."""
+
+    def __init__(self, host_iter: Iterator, sharding=None):
+        self._it = iter(host_iter)
+        self._sharding = sharding
+        self._next = self._put(next(self._it, None))
+
+    def _put(self, host_batch):
+        if host_batch is None:
+            return None
+        if self._sharding is not None:
+            return jax.tree.map(
+                lambda x, s: jax.device_put(x, s), host_batch,
+                self._sharding)
+        return jax.tree.map(jax.device_put, host_batch)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        if self._next is None:
+            raise StopIteration
+        out = self._next
+        # schedule the following transfer before the caller blocks on `out`
+        self._next = self._put(next(self._it, None))
+        return out
+
+
+def lm_batches(tokens: np.ndarray, batch: int, seq: int, *,
+               n_steps: Optional[int] = None, seed: int = 0,
+               skip: int = 0):
+    """Yield {tokens, labels} LM batches from a flat token stream.
+
+    ``skip`` fast-forwards the sampling RNG — restart-deterministic data
+    order (the restore path replays the exact batch sequence)."""
+    n_per = batch * (seq + 1)
+    rng = np.random.default_rng(seed)
+    for _ in range(skip):
+        rng.integers(0, max(1, len(tokens) - n_per - 1))
+    step = 0
+    while n_steps is None or step < n_steps:
+        start = int(rng.integers(0, max(1, len(tokens) - n_per - 1)))
+        window = tokens[start: start + n_per]
+        if len(window) < n_per:
+            window = np.pad(window, (0, n_per - len(window)))
+        grid = window.reshape(batch, seq + 1)
+        yield {"tokens": grid[:, :-1].astype(np.int32),
+               "labels": grid[:, 1:].astype(np.int32)}
+        step += 1

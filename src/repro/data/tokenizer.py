@@ -1,0 +1,70 @@
+"""Host-side tokenizer — where variable-length keys live (DESIGN.md §2.1).
+
+The paper encodes variable-length ``<h|key|value>`` records on the wire; the
+TPU engine wants fixed-width lanes. The split: this module turns arbitrary
+byte strings into dense int32 ids on the host (exactly the role of a
+production ingest tokenizer), and everything device-side is fixed-width.
+
+``Vocab`` can be *built by the MapReduce engine itself* (wordcount over a
+corpus → top-k words), which is how the LM examples tie the paper's engine
+into the training stack as the first-class ingest stage.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List
+
+import numpy as np
+
+_WORD = re.compile(rb"[A-Za-z0-9']+")
+
+UNK = 0
+
+
+def words_of(data: bytes) -> List[bytes]:
+    return _WORD.findall(data)
+
+
+@dataclass
+class Vocab:
+    """word <-> id mapping. id 0 is <unk>."""
+    words: List[bytes] = field(default_factory=list)
+
+    def __post_init__(self):
+        self._index: Dict[bytes, int] = {
+            w: i + 1 for i, w in enumerate(self.words)}
+
+    @property
+    def size(self) -> int:
+        return len(self.words) + 1
+
+    def id_of(self, word: bytes) -> int:
+        return self._index.get(word, UNK)
+
+    def word_of(self, i: int) -> bytes:
+        return b"<unk>" if i == 0 else self.words[i - 1]
+
+    @staticmethod
+    def from_counts(counts: Dict[bytes, int], max_size: int) -> "Vocab":
+        top = sorted(counts.items(), key=lambda kv: (-kv[1], kv[0]))
+        return Vocab([w for w, _ in top[: max_size - 1]])
+
+
+class HashTokenizer:
+    """Stateless fallback: word -> (hash % vocab). No vocab build needed;
+    used by synthetic-corpus flows where exact inversion is irrelevant."""
+
+    def __init__(self, vocab_size: int):
+        self.vocab_size = vocab_size
+
+    def encode_words(self, ws: Iterable[bytes]) -> np.ndarray:
+        out = [(hash(w) & 0x7FFFFFFF) % self.vocab_size for w in ws]
+        return np.asarray(out, np.int32)
+
+    def encode(self, data: bytes) -> np.ndarray:
+        return self.encode_words(words_of(data))
+
+
+def encode_with_vocab(data: bytes, vocab: Vocab) -> np.ndarray:
+    return np.asarray([vocab.id_of(w) for w in words_of(data)], np.int32)

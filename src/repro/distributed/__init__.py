@@ -1,0 +1,4 @@
+from repro.distributed.mesh import make_mesh, local_mesh, dp_spec, abstract_devices
+from repro.distributed.sharding import (
+    param_specs, activation_spec, logits_spec, kv_cache_spec, shard_params,
+)

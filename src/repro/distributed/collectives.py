@@ -1,0 +1,57 @@
+"""Collective helpers shared by the MapReduce engine and the MoE layer.
+
+Everything here runs *inside* ``shard_map`` regions (named-axis collectives).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def axis_size(name: str) -> int:
+    return lax.axis_size(name)
+
+
+def pvary(x, axis):
+    """Mark fresh constants as axis-varying inside shard_map regions
+    (required by the VMA type system for scan carries that meet collective
+    outputs)."""
+    return jax.tree.map(lambda a: lax.pcast(a, (axis,), to="varying"), x)
+
+
+def all_to_all_blocks(x: jnp.ndarray, axis: str) -> jnp.ndarray:
+    """Exchange equal blocks: x has leading dim P (one block per peer).
+
+    Row j of the result is the block rank j addressed to us. This is the
+    JAX-native carrier for the paper's bucketed shuffle (MPI_Alltoallv with
+    fixed-capacity buckets).
+    """
+    P = lax.axis_size(axis)
+    assert x.shape[0] == P, (x.shape, P)
+    return lax.all_to_all(x, axis, split_axis=0, concat_axis=0, tiled=False)
+
+
+def ring_send_right(x: jnp.ndarray, axis: str, shift: int = 1) -> jnp.ndarray:
+    P = lax.axis_size(axis)
+    perm = [(i, (i + shift) % P) for i in range(P)]
+    return lax.ppermute(x, axis, perm)
+
+
+def tree_gather_permute(x, axis: str, level: int):
+    """collective_permute used by the combine tree: at ``level`` l, rank
+    i + 2**l sends its payload to rank i (for i multiple of 2**(l+1))."""
+    P = lax.axis_size(axis)
+    stride = 1 << level
+    perm = []
+    for i in range(0, P, stride * 2):
+        if i + stride < P:
+            perm.append((i + stride, i))
+    return lax.ppermute(x, axis, perm)
+
+
+def psum_dp(x, mesh_cfg):
+    """psum over all data-parallel axes (pod + data) under shard_map."""
+    for ax in mesh_cfg.dp_axes:
+        x = lax.psum(x, ax)
+    return x

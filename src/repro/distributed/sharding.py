@@ -1,0 +1,222 @@
+"""Logical → mesh sharding rules.
+
+Parameters are nested dicts with conventional leaf names (see models/).
+``param_specs`` walks the tree and assigns a PartitionSpec per leaf:
+
+  * Megatron TP over the ``"model"`` axis on head / d_ff / vocab / expert dims,
+    only when the dim is divisible by tp (GQA archs with kv_heads < tp use
+    Megatron-style KV replication: q/o sharded on heads, k/v replicated).
+  * FSDP (ZeRO-3-style) over the ``"data"`` axis on one remaining dim of every
+    matrix, when divisible. Cross-pod stays pure DP (pod axis replicates
+    params; gradients reduce over it) — the right default for DCN links.
+  * Stacked scan blocks get a leading ``None`` for the layer dim.
+
+Activations / logits / KV-cache specs live here too so train/, serve/ and
+launch/ agree on one source of truth.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, MeshConfig
+
+
+# --------------------------------------------------------------------------
+# helpers
+# --------------------------------------------------------------------------
+
+def _divisible(dim: int, by: int) -> bool:
+    return by > 0 and dim % by == 0
+
+
+def _dp_entry(mesh_cfg: MeshConfig):
+    axes = mesh_cfg.dp_axes
+    return axes[0] if len(axes) == 1 else tuple(axes)
+
+
+def _fsdp_axis(mesh_cfg: MeshConfig) -> str:
+    return "data"
+
+
+def _fsdp_size(mesh_cfg: MeshConfig) -> int:
+    for s, a in zip(mesh_cfg.shape, mesh_cfg.axes):
+        if a == "data":
+            return s
+    return 1
+
+
+# --------------------------------------------------------------------------
+# per-leaf rule
+# --------------------------------------------------------------------------
+
+def _leaf_spec(name: str, shape, cfg: ModelConfig, mesh_cfg: MeshConfig,
+               variant: str = "default") -> P:
+    """Spec for an *unstacked* leaf (no leading scan dim).
+
+    variants (§Perf hillclimb levers, EXPERIMENTS.md):
+      default  — Megatron TP over "model" + FSDP over "data" (baseline)
+      flat_dp  — no TP: pure FSDP with params sharded over the flattened
+                 ("data","model") axes; batch over both axes too
+      serve    — no FSDP (nothing re-gathers per step): dense TP over
+                 "model", experts EP over "model" + d_ff TP over
+                 ``cfg.expert_tp_axis``
+    """
+    tp = mesh_cfg.tp_size if "model" in mesh_cfg.axes else 0
+    fa, fs = _fsdp_axis(mesh_cfg), _fsdp_size(mesh_cfg)
+    if variant == "flat_dp":
+        tp = 0                                    # no Megatron TP anywhere
+        fa = tuple(mesh_cfg.axes)                 # flat FSDP
+        fs = mesh_cfg.n_devices
+    elif variant == "serve":
+        fs = 0                                    # disables FSDP fill
+    heads_ok = _divisible(cfg.n_heads, tp)
+    kv_ok = _divisible(cfg.n_kv_heads, tp)
+    ssm_ok = cfg.ssm_head_dim and _divisible(cfg.d_inner // cfg.ssm_head_dim, tp)
+
+    def mat(d_in_axis, d_out_axis):
+        """2D matrix (in, out); axes may be None."""
+        spec = [d_in_axis, d_out_axis]
+        # FSDP on the first unsharded, divisible dim.
+        for i in range(2):
+            if spec[i] is None and _divisible(shape[i], fs):
+                spec[i] = fa
+                break
+        return P(*spec)
+
+    V, D = cfg.vocab_size, cfg.d_model
+    vocab_ok = _divisible(V, tp)
+
+    if name == "embed_tokens":                      # (V, D)
+        return mat("model" if vocab_ok else None, None)
+    if name == "lm_head":                           # (D, V)
+        return mat(None, "model" if vocab_ok else None)
+    if name in ("wq", "q_a"):                       # (D, H*hd)
+        return mat(None, "model" if heads_ok else None)
+    if name in ("wk", "wv"):                        # (D, KV*hd)
+        return mat(None, "model" if kv_ok else None)
+    if name in ("bq",):                             # (H*hd,)
+        return P("model") if heads_ok and _divisible(shape[0], tp) else P(None)
+    if name in ("bk", "bv"):
+        return P("model") if kv_ok and _divisible(shape[0], tp) else P(None)
+    if name == "wo":                                # (H*hd, D)
+        return mat("model" if heads_ok else None, None)
+    if name in ("w_gate", "w_in"):                  # (D, F)
+        return mat(None, "model" if _divisible(shape[1], tp) else None)
+    if name == "w_out":                             # (F, D)
+        return mat("model" if _divisible(shape[0], tp) else None, None)
+    if name == "router":                            # (D, E)
+        return mat(None, None)
+    if name in ("we_gate", "we_in", "we_out"):      # (E, D, Fe) / (E, Fe, D)
+        e_ax = "model" if _divisible(shape[0], tp) else None
+        if variant == "serve" and cfg.expert_tp_axis:
+            # TP-within-expert over the data axis: d_ff sharded, outputs
+            # partial-summed (moe_forward psums) — zero per-step re-gather
+            f_dim = 2 if name in ("we_gate", "we_in") else 1
+            spec = [e_ax, None, None]
+            spec[f_dim] = cfg.expert_tp_axis
+            return P(*spec)
+        rest = [None, None]
+        for i in (1, 2):
+            if _divisible(shape[i], fs):
+                rest[i - 1] = fa
+                break
+        return P(e_ax, *rest)
+    if name == "w_kv_a":                            # (D, lora+rope) — small, replicate TP
+        return mat(None, None)
+    if name == "w_kv_b":                            # (lora, H*(nope+v))
+        return mat(None, "model" if heads_ok else None)
+    # --- SSM leaves ---
+    if name in ("w_z", "w_x"):                      # (D, d_inner)
+        return mat(None, "model" if ssm_ok else None)
+    if name in ("w_B", "w_C"):                      # (D, G*N) — shared across heads
+        return mat(None, None)
+    if name == "w_dt":                              # (D, n_ssm_heads)
+        return mat(None, "model" if ssm_ok else None)
+    if name == "conv_x":                            # (K, d_inner)
+        return P(None, "model") if ssm_ok else P(None, None)
+    if name in ("conv_B", "conv_C"):                # (K, G*N)
+        return P(None, None)
+    if name in ("A_log", "D_skip", "dt_bias"):      # (n_ssm_heads,)
+        return P("model") if ssm_ok else P(None)
+    if name == "gate_norm":                         # (d_inner,)
+        return P("model") if ssm_ok else P(None)
+    # norms / scalars / anything 1-D: replicate
+    return P(*([None] * len(shape)))
+
+
+def _stacked(spec: P) -> P:
+    return P(None, *spec)
+
+
+def param_specs(params_or_shapes: Any, cfg: ModelConfig, mesh_cfg: MeshConfig,
+                variant: str = "default"):
+    """Pytree of PartitionSpec matching ``params``.
+
+    Leaves under a ``blocks`` / ``enc_blocks`` subtree are scan-stacked and get
+    a leading None.
+    """
+    def visit(path, leaf):
+        keys = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+        name = keys[-1]
+        stacked = any(k in ("blocks", "enc_blocks") for k in keys)
+        shape = leaf.shape
+        if stacked:
+            shape = shape[1:]
+        spec = _leaf_spec(name, shape, cfg, mesh_cfg, variant)
+        return _stacked(spec) if stacked else spec
+
+    return jax.tree_util.tree_map_with_path(visit, params_or_shapes)
+
+
+def shard_params(params, cfg: ModelConfig, mesh, mesh_cfg: MeshConfig):
+    specs = param_specs(params, cfg, mesh_cfg)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), params, specs
+    )
+
+
+# --------------------------------------------------------------------------
+# activation / cache specs
+# --------------------------------------------------------------------------
+
+def activation_spec(mesh_cfg: MeshConfig, batch: int) -> P:
+    """(B, S, D) hidden states: batch over dp axes when divisible."""
+    dp = _dp_entry(mesh_cfg)
+    if batch % mesh_cfg.dp_size == 0:
+        return P(dp, None, None)
+    if batch % _fsdp_size(mesh_cfg) == 0:
+        return P("data", None, None)
+    return P(None, None, None)
+
+
+def tokens_spec(mesh_cfg: MeshConfig, batch: int) -> P:
+    a = activation_spec(mesh_cfg, batch)
+    return P(a[0], None)
+
+
+def logits_spec(cfg: ModelConfig, mesh_cfg: MeshConfig, batch: int) -> P:
+    a = activation_spec(mesh_cfg, batch)
+    vocab_ok = _divisible(cfg.vocab_size, mesh_cfg.tp_size)
+    return P(a[0], None, "model" if vocab_ok else None)
+
+
+def kv_cache_spec(cfg: ModelConfig, mesh_cfg: MeshConfig, batch: int) -> P:
+    """KV cache (B, S, KV, hd) [GQA] or (B, S, C) [MLA compressed].
+
+    Sequence-sharded over ``model`` — uniform flash-decode layout that works
+    for every kv_heads count and keeps 32k–512k caches within HBM.
+    """
+    a = activation_spec(mesh_cfg, batch)
+    return P(a[0], "model")  # trailing dims replicated
+
+
+def batch_axis_size(mesh_cfg: MeshConfig, batch: int) -> int:
+    """How many ways the batch is actually sharded (for shard_map blocks)."""
+    if batch % mesh_cfg.dp_size == 0:
+        return mesh_cfg.dp_size
+    if batch % _fsdp_size(mesh_cfg) == 0:
+        return _fsdp_size(mesh_cfg)
+    return 1

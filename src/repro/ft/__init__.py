@@ -1,0 +1,2 @@
+from repro.ft.elastic import remesh_plan, fold_windows
+from repro.ft.straggler import ThroughputTracker, rebalance_tasks

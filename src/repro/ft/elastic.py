@@ -1,0 +1,53 @@
+"""Elastic re-meshing after node failure.
+
+What makes this *cheap* in this framework is the paper's own design:
+
+  * the task planner is decentralized (rank-indexed round-robin, no master),
+    so reassigning a dead rank's remaining tasks is pure arithmetic;
+  * the Combine tree dup-sums records by key across *all* ranks, so window
+    ownership does not have to be preserved across a re-mesh — any
+    distribution of the surviving window state onto the new mesh yields the
+    exact result (``fold_windows``). This is the ownership-transfer
+    semantics of paper footnote 2, promoted to a fault-tolerance mechanism.
+
+For the LM trainer the analogue is checkpoint restore onto the surviving
+mesh: ``CheckpointManager.restore(shardings=new)`` re-shards every leaf;
+``remesh_plan`` picks the new mesh shape.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.config import MeshConfig
+
+
+def remesh_plan(n_surviving: int, prefer_model: int = 16) -> MeshConfig:
+    """Largest (data, model) mesh fitting the surviving device count.
+
+    Keeps the model axis as close to ``prefer_model`` as divides, shrinking
+    data parallelism first (the cheap direction: batch shrinks, params
+    re-shard; TP degree changes force a re-layout of every weight)."""
+    model = prefer_model
+    while model > 1 and n_surviving % model:
+        model //= 2
+    data = n_surviving // model
+    if data * model == 0:
+        raise ValueError(f"no mesh for {n_surviving} devices")
+    return MeshConfig((data, model), ("data", "model"))
+
+
+def fold_windows(tables: np.ndarray, n_new: int) -> np.ndarray:
+    """Redistribute per-rank dense Key-Value windows (P_old, vocab) onto
+    P_new ranks by summing old tables round-robin. Exact because Combine
+    dup-sums by key across ranks."""
+    P_old, vocab = tables.shape
+    out = np.zeros((n_new, vocab), tables.dtype)
+    for r in range(P_old):
+        out[r % n_new] += tables[r]
+    return out
+
+
+def surviving_ranks(n_procs: int, failed: List[int]) -> List[int]:
+    return [r for r in range(n_procs) if r not in set(failed)]

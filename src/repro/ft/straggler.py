@@ -1,0 +1,63 @@
+"""Straggler mitigation: throughput-aware task re-planning.
+
+The 1S engine itself is the first line of defense (a slow rank's reduce
+work spreads across the map timeline instead of gating a barrier). This
+module adds the second line: the host tracks per-rank segment throughput
+and re-plans the *remaining* tasks proportionally at every segment
+boundary. Re-planning (not re-issuing in-flight work) keeps exactly-once
+semantics — no dedup machinery needed, results stay exact.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List
+
+import numpy as np
+
+
+@dataclass
+class ThroughputTracker:
+    n_procs: int
+    alpha: float = 0.5                       # EWMA smoothing
+    rate: np.ndarray = field(default=None)
+
+    def __post_init__(self):
+        if self.rate is None:
+            self.rate = np.ones((self.n_procs,), np.float64)
+
+    def update(self, seg_seconds: np.ndarray):
+        """seg_seconds: wall time each rank spent on the last segment
+        (same task count each) — lower is faster."""
+        seg_seconds = np.maximum(np.asarray(seg_seconds, np.float64), 1e-9)
+        inst = 1.0 / seg_seconds
+        self.rate = self.alpha * inst + (1 - self.alpha) * self.rate
+
+    def is_straggler(self, threshold: float = 0.5) -> np.ndarray:
+        """Ranks slower than ``threshold`` × median throughput."""
+        med = np.median(self.rate)
+        return self.rate < threshold * med
+
+
+def rebalance_tasks(task_ids: List[int], rate: np.ndarray,
+                    tasks_per_segment: int) -> np.ndarray:
+    """Assign the next segment's tasks proportional to throughput.
+
+    Returns (n_procs, tasks_per_proc) of task ids, -1 padded (a -1 task is
+    a no-op in the engine). Every task appears exactly once — exactness is
+    preserved by construction."""
+    n_procs = len(rate)
+    quota = rate / rate.sum() * min(len(task_ids), tasks_per_segment)
+    counts = np.floor(quota).astype(int)
+    # distribute the remainder to the fastest ranks
+    rem = min(len(task_ids), tasks_per_segment) - counts.sum()
+    order = np.argsort(-rate)
+    for i in range(rem):
+        counts[order[i % n_procs]] += 1
+    width = max(counts.max(initial=1), 1)
+    out = -np.ones((n_procs, width), np.int32)
+    cursor = 0
+    for r in range(n_procs):
+        take = counts[r]
+        out[r, :take] = task_ids[cursor: cursor + take]
+        cursor += take
+    return out

@@ -1,0 +1,33 @@
+"""jit wrapper: (B, S, H, hd) layout in, GQA head-group mapping, padding."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "interpret",
+                                   "block_q", "block_kv"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 512, block_kv: int = 512,
+                    interpret: bool | None = None):
+    """q: (B, S, H, hd); k/v: (B, Skv, KV, hd). Returns (B, S, H, hd)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, S, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    # batch-major flatten so kv row = q row // group
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, Skv, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, Skv, hd)
+    o = flash_attention_pallas(qf, kf, vf, causal=causal, window=window,
+                               block_q=block_q, block_kv=block_kv,
+                               interpret=interpret)
+    return o.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

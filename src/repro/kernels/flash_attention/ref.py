@@ -1,0 +1,3 @@
+"""Oracle: the chunked reference in models/attention (itself validated
+against the O(S^2) dense form)."""
+from repro.models.attention import attention_dense_ref, flash_attention_ref

@@ -1,0 +1,30 @@
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_decode.kernel import flash_decode_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("block_kv", "interpret"))
+def flash_decode(q, k, v, t, *, block_kv: int = 1024,
+                 interpret: bool | None = None):
+    """q: (B, H, hd); k/v: (B, S, KV, hd); t: scalar current length.
+    Returns (B, H, hd)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, H, hd = q.shape
+    _, S, KV, _ = k.shape
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd).reshape(B * KV, G, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+    o = flash_decode_pallas(qg, kf, vf, t, block_kv=block_kv,
+                            interpret=interpret)
+    return o.reshape(B, KV * G, hd)

@@ -1,0 +1,15 @@
+"""Oracle: the decode partials path in models/attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import _decode_partials, combine_partials
+
+
+def flash_decode_ref(q, k, v, t):
+    """q: (B, H, hd); k/v: (B, S, KV, hd); t: current length."""
+    S = k.shape[1]
+    o, l, m = _decode_partials(q, k, v, jnp.arange(S), t)
+    out = combine_partials(o, l, m, None)
+    B, KV, G, hd = out.shape
+    return out.reshape(B, KV * G, hd).astype(q.dtype)

@@ -1,0 +1,19 @@
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.moe_dispatch.kernel import bucket_slots_pallas
+from repro.kernels.moe_dispatch.ref import bucket_slots_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("n_experts", "interpret"))
+def bucket_slots(eids, n_experts: int, interpret: bool | None = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return bucket_slots_pallas(eids, n_experts, interpret=interpret)

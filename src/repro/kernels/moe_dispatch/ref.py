@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for bucket_slots."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bucket_slots_ref(eids: jnp.ndarray, n_experts: int):
+    T = eids.shape[0]
+    valid = (eids >= 0) & (eids < n_experts)
+    oh = ((eids[:, None] == jnp.arange(n_experts)[None, :])
+          & valid[:, None]).astype(jnp.int32)
+    prefix = jnp.cumsum(oh, axis=0) - 1
+    picked = jnp.take_along_axis(
+        prefix, jnp.clip(eids, 0, n_experts - 1)[:, None], axis=1)[:, 0]
+    slots = jnp.where(valid, picked, -1)
+    counts = jnp.sum(oh, axis=0)
+    return slots, counts

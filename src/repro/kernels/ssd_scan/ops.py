@@ -1,0 +1,52 @@
+"""jit wrapper matching the models/ssm ssd_ref signature."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, A, B, C, *, chunk: int = 256, init_state=None,
+        interpret: bool | None = None):
+    """x: (B, S, H, P); dt: (B, S, H); A: (H,); B/C: (B, S, G, N).
+    Returns (y (B, S, H, P), final_state (B, H, P, N)).
+
+    ``init_state`` is folded in by running the kernel from zero and adding
+    the closed-form init contribution (exactness preserved; the serving
+    path never threads init_state through prefill)."""
+    Bb, S, H, Pd = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    # (B, S, H, *) -> (B*H, S, *)
+    xf = x.transpose(0, 2, 1, 3).reshape(Bb * H, S, Pd)
+    dtf = dt.transpose(0, 2, 1).reshape(Bb * H, S, 1)
+    Bh = jnp.repeat(B, rep, axis=2).transpose(0, 2, 1, 3).reshape(
+        Bb * H, S, N)
+    Ch = jnp.repeat(C, rep, axis=2).transpose(0, 2, 1, 3).reshape(
+        Bb * H, S, N)
+    Af = jnp.broadcast_to(A[None, :], (Bb, H)).reshape(Bb * H, 1)
+    y, st = ssd_pallas(xf, dtf, Af, Bh, Ch, chunk=chunk,
+                       interpret=interpret
+                       if interpret is not None else not _on_tpu())
+    y = y.reshape(Bb, H, S, Pd).transpose(0, 2, 1, 3)
+    st = st.reshape(Bb, H, Pd, N)
+    if init_state is not None:
+        # y_init[t] = C_t · (init * exp(cum_t)); state += init * exp(cum_S)
+        dA = dt.astype(jnp.float32) * A[None, None, :]
+        cum = jnp.cumsum(dA, axis=1)                      # (B, S, H)
+        Chh = jnp.repeat(C, rep, axis=2)                  # (B, S, H, N)
+        y_init = jnp.einsum("bshn,bhpn,bsh->bshp", Chh,
+                            init_state.astype(jnp.float32), jnp.exp(cum),
+                            preferred_element_type=jnp.float32)
+        y = y + y_init.astype(y.dtype)
+        st = st + init_state.astype(jnp.float32) \
+            * jnp.exp(cum[:, -1])[:, :, None, None]       # (B,H,1,1)
+    return y, st

@@ -1,0 +1,3 @@
+"""Oracle: the chunked SSD reference in models/ssm (validated against the
+sequential token-by-token recurrence)."""
+from repro.models.ssm import ssd_ref

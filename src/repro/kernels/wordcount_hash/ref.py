@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the wordcount histogram kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.kv import mix32
+
+SENTINEL = jnp.iinfo(jnp.int32).max
+
+
+def hist_ref(tokens: jnp.ndarray, vocab: int, *, hash_mod: int = 0
+             ) -> jnp.ndarray:
+    valid = tokens != SENTINEL
+    if hash_mod > 0:
+        keys = (mix32(tokens) % jnp.uint32(hash_mod)).astype(jnp.int32)
+    else:
+        keys = tokens
+    keys = jnp.where(valid, keys, vocab)      # ghost slot
+    return jnp.zeros((vocab + 1,), jnp.int32).at[keys].add(1)[:vocab]

@@ -1,0 +1,175 @@
+"""Input specs + sharding assembly for every (arch × shape × mesh) cell.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, no device allocation. The sharding builders
+map each abstract tree onto the mesh via distributed/sharding.py rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import (MeshConfig, ModelConfig, RunConfig, ShapeConfig,
+                          TrainConfig)
+from repro.distributed import sharding as shd
+from repro.models import transformer as tf
+
+
+# ---------------------------------------------------------------------------
+# frontend geometry
+# ---------------------------------------------------------------------------
+
+def vlm_prefix_len(seq_len: int) -> int:
+    return min(1024, seq_len // 4)
+
+
+def frontend_geometry(cfg: ModelConfig, shape: ShapeConfig
+                      ) -> Tuple[int, int, int]:
+    """(text_len, frontend_len, enc_len). seq_len budgets the full context
+    (image prefix + text for VLM; decoder length for audio)."""
+    S = shape.seq_len
+    if cfg.frontend == "vision_stub":
+        f = vlm_prefix_len(S)
+        return S - f, f, 0
+    if cfg.n_enc_layers:
+        enc = S // max(cfg.enc_seq_factor, 1)
+        return S, enc, enc
+    return S, 0, 0
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Batch stand-ins for train/prefill; decode uses decode_input_specs."""
+    B = shape.global_batch
+    S_text, S_f, _ = frontend_geometry(cfg, shape)
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S_text), jnp.int32)}
+    if shape.is_train:
+        batch["labels"] = jax.ShapeDtypeStruct((B, S_text), jnp.int32)
+    if S_f:
+        batch["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (B, S_f, cfg.d_model), jnp.dtype(cfg.dtype))
+    return batch
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """(cache, tokens_t, t) stand-ins for one serve_step at context
+    seq_len."""
+    B = shape.global_batch
+    S_ctx, _, enc_len = frontend_geometry(cfg, shape)
+    S_max = shape.seq_len
+    cache = jax.eval_shape(
+        lambda: tf.init_cache(cfg, B, S_max, enc_len=enc_len))
+    tokens_t = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    t = jax.ShapeDtypeStruct((), jnp.int32)
+    return cache, tokens_t, t
+
+
+# ---------------------------------------------------------------------------
+# shardings
+# ---------------------------------------------------------------------------
+
+def dp_entry_for(shape: ShapeConfig, mesh_cfg: MeshConfig,
+                 variant: str = "default"):
+    B = shape.global_batch
+    if variant == "flat_dp" and B % mesh_cfg.n_devices == 0:
+        return tuple(mesh_cfg.axes)        # batch over the whole mesh
+    if B % mesh_cfg.dp_size == 0:
+        axes = mesh_cfg.dp_axes
+        return axes[0] if len(axes) == 1 else tuple(axes)
+    for ax, sz in zip(mesh_cfg.axes, mesh_cfg.shape):
+        if ax == "data" and B % sz == 0:
+            return "data"
+    return None
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                    mesh_cfg: MeshConfig, batch_struct,
+                    variant: str = "default"):
+    dp = dp_entry_for(shape, mesh_cfg, variant)
+
+    def spec(path_leaf):
+        nd = len(path_leaf.shape)
+        return NamedSharding(mesh, P(dp, *([None] * (nd - 1))))
+
+    return jax.tree.map(spec, batch_struct)
+
+
+def params_shardings(cfg: ModelConfig, mesh, mesh_cfg: MeshConfig,
+                     abstract_params, variant: str = "default"):
+    specs = shd.param_specs(abstract_params, cfg, mesh_cfg, variant)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def state_shardings(cfg: ModelConfig, mesh, mesh_cfg: MeshConfig,
+                    abstract_state, variant: str = "default"):
+    """TrainState(params, AdamWState(step, mu, nu), residual)."""
+    p_sh = params_shardings(cfg, mesh, mesh_cfg, abstract_state.params,
+                            variant)
+    from repro.train.train_step import TrainState
+    from repro.optim.adamw import AdamWState
+    step_sh = NamedSharding(mesh, P())
+    res = abstract_state.residual
+    return TrainState(
+        params=p_sh,
+        opt=AdamWState(step=step_sh, mu=p_sh, nu=p_sh),
+        residual=None if res is None else p_sh,
+    )
+
+
+def _cache_leaf_spec(name: str, shape: Tuple[int, ...], cfg: ModelConfig,
+                     mesh_cfg: MeshConfig, dp) -> P:
+    tp = mesh_cfg.tp_size
+    if name in ("k", "v", "cross_k", "cross_v"):     # (B, S, KV, hd)
+        seq_ok = shape[1] % tp == 0
+        return P(dp, "model" if seq_ok else None, None, None)
+    if name == "ckv":                                 # (B, S, lora+rope)
+        seq_ok = shape[1] % tp == 0
+        return P(dp, "model" if seq_ok else None, None)
+    if name == "state":                               # (B, H, P, N)
+        return P(dp, "model" if shape[1] % tp == 0 else None, None, None)
+    if name.startswith("conv_"):                      # (B, K-1, C)
+        return P(dp, None, "model" if shape[2] % tp == 0 else None)
+    return P(dp, *([None] * (len(shape) - 1)))
+
+
+def cache_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                    mesh_cfg: MeshConfig, cache_struct):
+    dp = dp_entry_for(shape, mesh_cfg)
+
+    def visit(path, leaf):
+        keys = [getattr(p, "key", str(p)) for p in path]
+        name = keys[-1]
+        stacked = "blocks" in keys
+        shp = leaf.shape[1:] if stacked else leaf.shape
+        spec = _cache_leaf_spec(name, shp, cfg, mesh_cfg, dp)
+        if stacked:
+            spec = P(None, *spec)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(visit, cache_struct)
+
+
+# ---------------------------------------------------------------------------
+# per-arch training config (memory-driven numerics)
+# ---------------------------------------------------------------------------
+
+def train_config_for(cfg: ModelConfig) -> TrainConfig:
+    big = cfg.param_count() > 100e9
+    return TrainConfig(
+        moment_dtype="bfloat16" if big else "float32",
+        accum_dtype="bfloat16" if big else "float32",
+        remat_policy="full",
+    )
+
+
+def make_run(cfg: ModelConfig, shape: ShapeConfig, mesh_cfg: MeshConfig,
+             **kw) -> RunConfig:
+    return RunConfig(model=cfg, shape=shape, mesh=mesh_cfg,
+                     train=train_config_for(cfg), **kw)

@@ -1,0 +1,163 @@
+"""Production training driver.
+
+Wires every substrate together: config → mesh → sharded state → double-
+buffered data pipeline → jitted train step (decoupled grad sync, grad-accum,
+remat) → async checkpointing → straggler tracking → restart.
+
+On real hardware this launches under `jax.distributed` with the production
+mesh; on this container it runs the same code on N local host devices (set
+``--devices`` — the driver re-execs itself with XLA_FLAGS before jax
+initializes, keeping the no-global-512 rule).
+
+    PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --smoke \\
+        --steps 100 --batch 8 --seq 128 --devices 8 --mesh 2x4
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def _reexec_with_devices(n: int, argv):
+    if os.environ.get("_REPRO_DEVICES") == str(n):
+        return
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count={n}")
+    env["_REPRO_DEVICES"] = str(n)
+    args = argv if argv is not None else sys.argv[1:]
+    os.execve(sys.executable, [sys.executable, "-m", "repro.launch.train",
+                               *args], env)
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config of the same family")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--devices", type=int, default=1)
+    ap.add_argument("--mesh", default="",
+                    help="DxM data×model, e.g. 2x4 (default: devices×1)")
+    ap.add_argument("--dispatch", choices=["1s", "2s"], default="1s")
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--vocab", type=int, default=0,
+                    help="override vocab (synth data); 0 = config vocab")
+    ap.add_argument("--tokens", type=int, default=2_000_000)
+    ap.add_argument("--seed", type=int, default=0)
+    return ap.parse_args(argv)
+
+
+def main(argv=None):
+    args = parse_args(argv)
+    if args.devices > 1:
+        _reexec_with_devices(args.devices, argv)
+
+    import dataclasses
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro.ckpt.checkpoint import CheckpointManager
+    from repro.config import MeshConfig, ShapeConfig, TrainConfig
+    from repro.configs.registry import get_config, get_smoke_config
+    from repro.data.corpus import lm_token_stream
+    from repro.data.pipeline import DoubleBufferedLoader, lm_batches
+    from repro.distributed.mesh import local_mesh
+    from repro.ft.straggler import ThroughputTracker
+    from repro.launch import specs as sp
+    from repro.models.transformer import init_model
+    from repro.train.train_step import init_train_state, make_train_step
+
+    cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
+    cfg = dataclasses.replace(cfg, dispatch_mode=args.dispatch)
+    if args.vocab:
+        cfg = dataclasses.replace(cfg, vocab_size=args.vocab)
+
+    if args.mesh:
+        d, m = map(int, args.mesh.split("x"))
+    else:
+        d, m = args.devices, 1
+    assert d * m == args.devices, (d, m, args.devices)
+    mesh_cfg = MeshConfig((d, m), ("data", "model"))
+    mesh = local_mesh((d, m), ("data", "model"))
+
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    run = sp.make_run(cfg, shape, mesh_cfg, microbatch=args.microbatch)
+    run = dataclasses.replace(run, train=TrainConfig(
+        lr=args.lr, warmup_steps=max(args.steps // 20, 1),
+        total_steps=args.steps, seed=args.seed))
+    dp = sp.dp_entry_for(shape, mesh_cfg)
+
+    n_params_analytic = cfg.param_count()
+    print(f"[train] {cfg.name}: {n_params_analytic/1e6:.1f}M params, "
+          f"mesh {d}x{m}, batch {args.batch}x{args.seq}, "
+          f"accum {run.grad_accum_steps}, dispatch {cfg.dispatch_mode}")
+
+    params = init_model(cfg, jax.random.key(args.seed))
+    state = init_train_state(cfg, run.train, params)
+    state_sh = sp.state_shardings(cfg, mesh, mesh_cfg,
+                                  jax.eval_shape(lambda: state))
+    state = jax.device_put(state, state_sh)
+
+    mgr = None
+    start_step = 0
+    if args.ckpt_dir:
+        mgr = CheckpointManager(args.ckpt_dir, keep=2)
+        if args.resume and mgr.latest_step() is not None:
+            s, state, extra = mgr.restore(jax.eval_shape(lambda: state),
+                                          shardings=state_sh)
+            start_step = extra.get("next_step", s + 1)
+            print(f"[train] resumed from step {s} -> starting {start_step}")
+
+    toks = lm_token_stream(args.tokens, cfg.vocab_size, seed=args.seed)
+    batch_sh = None
+    it = lm_batches(toks, args.batch, args.seq, seed=args.seed,
+                    skip=start_step)
+    loader = DoubleBufferedLoader(it)
+
+    step_fn = jax.jit(make_train_step(cfg, run, mesh=mesh, dp_entry=dp),
+                      in_shardings=(state_sh, batch_sh),
+                      donate_argnums=(0,))
+    tracker = ThroughputTracker(n_procs=1)
+
+    t_start = time.perf_counter()
+    tokens_per_step = args.batch * args.seq
+    losses = []
+    for step, batch in zip(range(start_step, args.steps), loader):
+        t0 = time.perf_counter()
+        state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
+        tracker.update(np.asarray([dt]))
+        losses.append(loss)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"[train] step {step:5d} loss {loss:.4f} "
+                  f"ce {float(metrics['ce']):.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"{tokens_per_step/dt:,.0f} tok/s")
+        if mgr and args.ckpt_every and (step + 1) % args.ckpt_every == 0:
+            mgr.save_async(step, state, extra={"next_step": step + 1})
+    if mgr:
+        mgr.save(args.steps - 1, state,
+                 extra={"next_step": args.steps})
+        mgr.wait()
+    wall = time.perf_counter() - t_start
+    n_done = args.steps - start_step
+    print(f"[train] done: {n_done} steps in {wall:.1f}s "
+          f"({n_done*tokens_per_step/wall:,.0f} tok/s), "
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

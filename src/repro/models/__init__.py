@@ -1,0 +1,2 @@
+from repro.models.transformer import (decode_step, forward, init_cache,
+                                      init_model, loss_fn, prefill)

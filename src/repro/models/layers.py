@@ -1,0 +1,131 @@
+"""Shared layer primitives: norms, RoPE, SwiGLU MLP, embeddings.
+
+Functional style: ``init_*`` builds param dicts (leaf names are the sharding
+contract — see distributed/sharding.py), ``apply_*`` consumes them.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _init(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, key) -> Dict:
+    if cfg.norm_type == "nonparam_ln":      # OLMo: no scale/bias
+        return {}
+    return {"scale": jnp.ones((cfg.d_model,), dtype_of(cfg))}
+
+
+def apply_norm(cfg: ModelConfig, p: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm" or cfg.norm_type == "nonparam_ln":
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+    else:                                    # rmsnorm
+        ms = jnp.mean(xf * xf, -1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps)
+    if "scale" in p:
+        y = y * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_over(x, scale, eps=1e-5):
+    """RMS norm over the last dim with an explicit scale vector (qk-norm,
+    mamba gate norm)."""
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, jnp.float32) / dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x: (..., S, dim); positions: (..., S) int32."""
+    dim = x.shape[-1]
+    freqs = rope_freqs(dim, theta)                      # (dim/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, dim/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg: ModelConfig, key, d_ff: int = 0) -> Dict:
+    d, ff = cfg.d_model, (d_ff or cfg.d_ff)
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d ** -0.5
+    s_out = ff ** -0.5
+    return {
+        "w_gate": _init(k1, (d, ff), s_in, dt),
+        "w_in": _init(k2, (d, ff), s_in, dt),
+        "w_out": _init(k3, (ff, d), s_out, dt),
+    }
+
+
+def apply_mlp(p: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    g = jax.nn.silu(x @ p["w_gate"])
+    h = x @ p["w_in"]
+    return (g * h) @ p["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# embeddings / head
+# ---------------------------------------------------------------------------
+
+def init_embed(cfg: ModelConfig, key) -> Dict:
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2 = jax.random.split(key)
+    p = {"embed_tokens": _init(k1, (cfg.vocab_size, cfg.d_model), 0.02, dt)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = _init(k2, (cfg.d_model, cfg.vocab_size),
+                             cfg.d_model ** -0.5, dt)
+    return p
+
+
+def embed_tokens(cfg: ModelConfig, p: Dict, tokens: jnp.ndarray):
+    return p["embed_tokens"][tokens]
+
+
+def unembed(cfg: ModelConfig, p: Dict, x: jnp.ndarray):
+    if cfg.tie_embeddings:
+        return x @ p["embed_tokens"].T
+    return x @ p["lm_head"]
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray = None):
+    """Token-mean CE; logits may be vocab-sharded (GSPMD reduces)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, -1)
+    ll = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    nll = lse - ll
+    if mask is None:
+        return jnp.mean(nll)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)

@@ -1,0 +1,219 @@
+"""Mamba-2 SSD (state-space duality) block — arXiv:2405.21060.
+
+Chunked SSD algorithm: within a chunk the recurrence is computed as a masked
+(attention-like) quadratic form; across chunks a linear state pass carries
+(H, P, N) states. This is itself a decoupled producer/consumer pipeline —
+intra-chunk compute overlaps the inter-chunk state pass on TPU (DESIGN.md).
+
+Shapes (SSD convention):
+  x   (B, S, H, P)   P = head dim
+  dt  (B, S, H)      softplus-activated step sizes
+  A   (H,)           negative decay rate (from A_log)
+  B,C (B, S, G, N)   G groups (=1 here), N = ssm_state
+  y   (B, S, H, P)
+
+The Pallas kernel (kernels/ssd_scan) implements the same chunked algorithm;
+``ssd_ref`` here is its oracle and the dry-run path.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig
+from repro.models.layers import _init, rms_over
+
+
+# ---------------------------------------------------------------------------
+# core SSD math (oracle shared with kernels/ssd_scan/ref.py)
+# ---------------------------------------------------------------------------
+
+def ssd_ref(x, dt, A, B, C, *, chunk: int = 256, init_state=None):
+    """Chunked SSD. Returns (y, final_state (B,H,P,N)).
+
+    S need not divide the chunk: inputs are zero-padded (dt=0 ⇒ identity
+    decay, zero update — padding is exactly a no-op on the recurrence)."""
+    Bb, S, H, Pd = x.shape
+    G, N = B.shape[2], B.shape[3]
+    assert H % G == 0
+    chunk = min(chunk, S)
+    S_orig = S
+    if S % chunk:
+        pad = chunk - S % chunk
+        padf = lambda a: jnp.pad(a, [(0, 0), (0, pad)] +
+                                 [(0, 0)] * (a.ndim - 2))
+        x, dt, B, C = padf(x), padf(dt), padf(B), padf(C)
+        S = S + pad
+    nc = S // chunk
+
+    xc = x.reshape(Bb, nc, chunk, H, Pd)
+    dtc = dt.reshape(Bb, nc, chunk, H)
+    Bc = B.reshape(Bb, nc, chunk, G, N)
+    Cc = C.reshape(Bb, nc, chunk, G, N)
+    rep = H // G
+    Bh = jnp.repeat(Bc, rep, axis=3)                   # (B,nc,c,H,N)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    dA = dtc * A[None, None, None, :]                  # (B,nc,c,H) negative
+    cum = jnp.cumsum(dA, axis=2)                       # within-chunk cumsum
+
+    # --- intra-chunk (quadratic, causal-masked) ---
+    # L[i,j] = exp(cum_i - cum_j) for i >= j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,i,j,H)
+    ii = jnp.arange(chunk)
+    causal = ii[:, None] >= ii[None, :]
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(diff), 0.0)
+    # scores (z = chunk index, i/j = positions, s = state dim)
+    s = jnp.einsum("bzihs,bzjhs->bzijh", Ch, Bh,
+                   preferred_element_type=jnp.float32)     # (B,nc,i,j,H)
+    s = s * L
+    xdt = xc * dtc[..., None]                               # dt-weighted input
+    y_intra = jnp.einsum("bzijh,bzjhp->bzihp", s, xdt,
+                         preferred_element_type=jnp.float32)
+
+    # --- chunk states: state_n = sum_j exp(cum_last - cum_j) dt_j B_j x_j ---
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)         # (B,nc,c,H)
+    states = jnp.einsum("bzchs,bzchp,bzch->bzhps", Bh, xdt, decay_to_end,
+                        preferred_element_type=jnp.float32)
+
+    # --- inter-chunk recurrence over nc (the decoupled state pass) ---
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                 # (B,nc,H)
+
+    def pass_state(carry, inp):
+        st, dec = inp                                       # (B,H,P,N),(B,H)
+        new = carry * dec[..., None, None] + st
+        return new, carry                                   # emit incoming
+
+    init = (jnp.zeros((Bb, H, Pd, N), jnp.float32) if init_state is None
+            else init_state.astype(jnp.float32))
+    final, prev_states = lax.scan(
+        pass_state, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)           # (B,nc,H,P,N)
+
+    # --- contribution of carried-in state to each position ---
+    decay_from_start = jnp.exp(cum)                         # (B,nc,c,H)
+    y_inter = jnp.einsum("bzchs,bzhps,bzch->bzchp", Ch, prev_states,
+                         decay_from_start,
+                         preferred_element_type=jnp.float32)
+
+    y = (y_intra + y_inter).reshape(Bb, S, H, Pd)[:, :S_orig]
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(state, x_t, dt_t, A, B_t, C_t):
+    """Single-token recurrence. state: (B,H,P,N); x_t: (B,H,P);
+    dt_t: (B,H); B_t/C_t: (B,G,N)."""
+    H = x_t.shape[1]
+    G = B_t.shape[1]
+    rep = H // G
+    Bh = jnp.repeat(B_t, rep, axis=1)                       # (B,H,N)
+    Ch = jnp.repeat(C_t, rep, axis=1)
+    dA = jnp.exp(dt_t * A[None, :])[..., None, None]        # (B,H,1,1)
+    upd = (dt_t[..., None] * x_t)[..., None] * Bh[:, :, None, :]
+    state = state * dA + upd                                # (B,H,P,N)
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch,
+                   preferred_element_type=jnp.float32)
+    return y.astype(x_t.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# the full block (projections, conv, gating)
+# ---------------------------------------------------------------------------
+
+def init_ssm(cfg: ModelConfig, key) -> Dict:
+    d, di = cfg.d_model, cfg.d_inner
+    G, N, K = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_conv
+    H = cfg.n_ssm_heads
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    s = d ** -0.5
+    return {
+        "w_z": _init(ks[0], (d, di), s, dt),
+        "w_x": _init(ks[1], (d, di), s, dt),
+        "w_B": _init(ks[2], (d, G * N), s, dt),
+        "w_C": _init(ks[3], (d, G * N), s, dt),
+        "w_dt": _init(ks[4], (d, H), s, dt),
+        "dt_bias": jnp.zeros((H,), dt),
+        "conv_x": _init(ks[5], (K, di), K ** -0.5, dt),
+        "conv_B": _init(ks[6], (K, G * N), K ** -0.5, dt),
+        "conv_C": _init(ks[7], (K, G * N), K ** -0.5, dt),
+        "A_log": jnp.zeros((H,), dt),        # A = -exp(A_log) = -1
+        "D_skip": jnp.ones((H,), dt),
+        "gate_norm": jnp.ones((di,), dt),
+        "w_out": _init(jax.random.fold_in(key, 9), (di, d), di ** -0.5, dt),
+    }
+
+
+def _causal_conv(u, w, carry=None):
+    """Depthwise causal conv. u: (B, S, C); w: (K, C). carry: (B, K-1, C)."""
+    K = w.shape[0]
+    if carry is None:
+        pad = jnp.zeros((u.shape[0], K - 1, u.shape[2]), u.dtype)
+    else:
+        pad = carry.astype(u.dtype)
+    up = jnp.concatenate([pad, u], 1)
+    out = sum(up[:, i:i + u.shape[1]] * w[i][None, None] for i in range(K))
+    new_carry = up[:, -(K - 1):] if K > 1 else pad
+    return jax.nn.silu(out), new_carry
+
+
+def ssm_forward(cfg: ModelConfig, p: Dict, x, *, use_pallas=False,
+                init_state=None, conv_carry=None):
+    """x: (B, S, D) -> (B, S, D), cache {"state","conv_x","conv_B","conv_C"}."""
+    B_, S, _ = x.shape
+    H, Pd = cfg.n_ssm_heads, cfg.ssm_head_dim
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    z = x @ p["w_z"]
+    u = x @ p["w_x"]
+    Bp = x @ p["w_B"]
+    Cp = x @ p["w_C"]
+    dt = jax.nn.softplus((x @ p["w_dt"]) + p["dt_bias"])
+    cc = conv_carry or {}
+    u, cx = _causal_conv(u, p["conv_x"], cc.get("conv_x"))
+    Bp, cb = _causal_conv(Bp, p["conv_B"], cc.get("conv_B"))
+    Cp, cC = _causal_conv(Cp, p["conv_C"], cc.get("conv_C"))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = u.reshape(B_, S, H, Pd)
+    if use_pallas:
+        from repro.kernels.ssd_scan import ops as ssd_ops
+        y, state = ssd_ops.ssd(xh, dt, A, Bp.reshape(B_, S, G, N),
+                               Cp.reshape(B_, S, G, N), chunk=cfg.ssm_chunk,
+                               init_state=init_state)
+    else:
+        y, state = ssd_ref(xh, dt, A, Bp.reshape(B_, S, G, N),
+                           Cp.reshape(B_, S, G, N), chunk=cfg.ssm_chunk,
+                           init_state=init_state)
+    y = y + xh * p["D_skip"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B_, S, cfg.d_inner)
+    y = rms_over(y * jax.nn.silu(z), p["gate_norm"])
+    cache = {"state": state, "conv_x": cx, "conv_B": cb, "conv_C": cC}
+    return y @ p["w_out"], cache
+
+
+def ssm_decode(cfg: ModelConfig, p: Dict, x, cache: Dict):
+    """One-token step. x: (B, 1, D)."""
+    B_ = x.shape[0]
+    H, Pd = cfg.n_ssm_heads, cfg.ssm_head_dim
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    z = x @ p["w_z"]
+    u = x @ p["w_x"]
+    Bp = x @ p["w_B"]
+    Cp = x @ p["w_C"]
+    dt = jax.nn.softplus((x @ p["w_dt"]) + p["dt_bias"])
+    u, cx = _causal_conv(u, p["conv_x"], cache["conv_x"])
+    Bp, cb = _causal_conv(Bp, p["conv_B"], cache["conv_B"])
+    Cp, cC = _causal_conv(Cp, p["conv_C"], cache["conv_C"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, state = ssd_decode_step(cache["state"], u[:, 0].reshape(B_, H, Pd),
+                               dt[:, 0], A, Bp[:, 0].reshape(B_, G, N),
+                               Cp[:, 0].reshape(B_, G, N))
+    y = y + u[:, 0].reshape(B_, H, Pd) * p["D_skip"][None, :, None].astype(
+        y.dtype)
+    y = y.reshape(B_, 1, cfg.d_inner)
+    y = rms_over(y * jax.nn.silu(z), p["gate_norm"])
+    cache = {"state": state, "conv_x": cx, "conv_B": cb, "conv_C": cC}
+    return y @ p["w_out"], cache

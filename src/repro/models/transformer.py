@@ -1,0 +1,464 @@
+"""The model stack: every assigned architecture as one composable definition.
+
+A model is a stack of *super-blocks* scanned over ``cfg.n_scan_blocks``; each
+super-block holds ``cfg.block_pattern`` layers whose types repeat with the
+arch's period (llama4: dense+MoE pairs; jamba: 1 attention + 7 Mamba layers
+with MoE on odd slots; dense archs: a single layer). ``first_k_dense``
+leading layers (deepseek) sit outside the scan. Whisper adds a scanned
+encoder stack + cross-attention in every decoder layer. VLM/audio frontends
+are stubs: ``batch["frontend_embeds"]`` carries precomputed patch/frame
+embeddings (early fusion for VLM, encoder input for audio).
+
+Three entry points (the launcher lowers exactly these):
+  ``loss_fn``      train forward + CE (+ MoE aux)            [train shapes]
+  ``prefill``      full-sequence forward, returns caches      [prefill shapes]
+  ``decode_step``  one token against seq_len-sized caches     [decode shapes]
+
+``mesh=None`` runs everything unpartitioned (CPU smoke tests); with a mesh,
+MoE dispatch and flash-decode run in shard_map sub-regions while the rest is
+GSPMD-sharded by the in/out shardings the launcher supplies.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (apply_mlp, apply_norm, cross_entropy,
+                                 embed_tokens, init_embed, init_mlp,
+                                 init_norm, unembed)
+
+
+# ---------------------------------------------------------------------------
+# layer typing — which sublayers layer i carries
+# ---------------------------------------------------------------------------
+
+def layer_kind(cfg: ModelConfig, i: int) -> Tuple[str, str]:
+    """(mixer, ff) for absolute layer index i.
+
+    mixer: "attn" | "mla" | "ssm";  ff: "mlp" | "moe" | "none"
+    """
+    if cfg.family == "ssm":
+        return "ssm", "none"
+    if cfg.family == "hybrid" and not cfg.is_attn_layer(i):
+        mixer = "ssm"
+    elif cfg.attn_type == "mla":
+        mixer = "mla"
+    else:
+        mixer = "attn"
+    ff = "moe" if cfg.is_moe_layer(i) else "mlp"
+    return mixer, ff
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(cfg: ModelConfig, key, i: int, cross: bool = False) -> Dict:
+    mixer, ff = layer_kind(cfg, i)
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {"norm1": init_norm(cfg, ks[0])}
+    if mixer == "attn":
+        p["attn"] = attn.init_attention(cfg, ks[1])
+    elif mixer == "mla":
+        p["attn"] = attn.init_mla(cfg, ks[1])
+    else:
+        p["ssm"] = ssm_mod.init_ssm(cfg, ks[1])
+    if cross:
+        p["norm_x"] = init_norm(cfg, ks[4])
+        p["cross"] = attn.init_attention(cfg, ks[5], cross=True)
+    if ff != "none":
+        p["norm2"] = init_norm(cfg, ks[2])
+        if ff == "moe":
+            p["moe"] = moe_mod.init_moe(cfg, ks[3])
+        else:
+            p["mlp"] = init_mlp(cfg, ks[3])
+    return p
+
+
+def _init_superblock(cfg: ModelConfig, key, first_layer: int,
+                     cross: bool = False) -> Dict:
+    ks = jax.random.split(key, cfg.block_pattern)
+    return {f"layer{j}": _init_layer(cfg, ks[j], first_layer + j, cross)
+            for j in range(cfg.block_pattern)}
+
+
+def init_model(cfg: ModelConfig, key) -> Dict:
+    """Full parameter pytree. ``blocks``/``enc_blocks`` subtrees are stacked
+    (leading scan dim) — the sharding layer treats them specially."""
+    k_emb, k_blocks, k_head, k_dense, k_enc = jax.random.split(key, 5)
+    params: Dict[str, Any] = init_embed(cfg, k_emb)
+
+    # leading dense layers (outside the scan)
+    if cfg.first_k_dense:
+        dk = jax.random.split(k_dense, cfg.first_k_dense)
+        params["dense_layers"] = {
+            f"layer{i}": _init_layer(cfg, dk[i], i)
+            for i in range(cfg.first_k_dense)
+        }
+
+    nb = cfg.n_scan_blocks
+    bkeys = jax.random.split(k_blocks, nb)
+    first = cfg.first_k_dense
+    cross = cfg.n_enc_layers > 0
+    blocks = [
+        _init_superblock(cfg, bkeys[b], first + b * cfg.block_pattern, cross)
+        for b in range(nb)
+    ]
+    params["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+
+    if cfg.n_enc_layers:
+        enc_cfg = dataclasses.replace(cfg, attn_type="gqa", n_experts=0,
+                                      family="dense", block_pattern=1)
+        ekeys = jax.random.split(k_enc, cfg.n_enc_layers)
+        enc = [_init_superblock(enc_cfg, ekeys[i], i)
+               for i in range(cfg.n_enc_layers)]
+        params["enc_blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *enc)
+        params["enc_norm"] = init_norm(cfg, jax.random.fold_in(k_enc, 1))
+
+    params["final_norm"] = init_norm(cfg, k_head)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# single layer forward (train/prefill)
+# ---------------------------------------------------------------------------
+
+def _layer_forward(cfg: ModelConfig, p: Dict, x, positions, i: int, *,
+                   causal: bool, enc_out=None, mesh=None, dp_entry=None,
+                   use_pallas: bool = False, unroll: bool = False):
+    """Returns (x, cache_dict, aux_loss)."""
+    mixer, ff = layer_kind(cfg, i)
+    aux = jnp.float32(0.0)
+    h = apply_norm(cfg, p["norm1"], x)
+    if mixer == "ssm":
+        out, cache = ssm_mod.ssm_forward(cfg, p["ssm"], h,
+                                         use_pallas=use_pallas)
+    elif mixer == "mla":
+        out, cache = attn.mla_forward(cfg, p["attn"], h, positions,
+                                      use_pallas=use_pallas, unroll=unroll)
+    else:
+        out, kv = attn.attention_forward(cfg, p["attn"], h, positions,
+                                         causal=causal,
+                                         use_pallas=use_pallas,
+                                         unroll=unroll)
+        cache = {"k": kv[0], "v": kv[1]}
+    x = x + out
+
+    if enc_out is not None and "cross" in p:
+        h = apply_norm(cfg, p["norm_x"], x)
+        q, k, v = attn._qkv(cfg, p["cross"], h, enc_out)
+        fa = (attn.flash_attention_costexact if unroll
+              else attn.flash_attention_ref)
+        o = fa(q, k, v, causal=False)
+        B, S, H, hd = q.shape
+        x = x + o.reshape(B, S, H * hd) @ p["cross"]["wo"]
+        cache["cross_k"], cache["cross_v"] = k, v
+
+    if ff != "none":
+        h = apply_norm(cfg, p["norm2"], x)
+        if ff == "moe":
+            y, aux = moe_mod.moe_forward(cfg, p["moe"], h, mesh=mesh,
+                                         dp_entry=dp_entry, unroll=unroll)
+        else:
+            y = apply_mlp(p["mlp"], h)
+        x = x + y
+    return x, cache, aux
+
+
+def _superblock_forward(cfg: ModelConfig, p: Dict, x, positions,
+                        first_layer: int, *, causal=True, enc_out=None,
+                        mesh=None, dp_entry=None, use_pallas=False,
+                        want_cache=False, unroll=False):
+    caches = {}
+    aux_total = jnp.float32(0.0)
+    for j in range(cfg.block_pattern):
+        x, cache, aux = _layer_forward(
+            cfg, p[f"layer{j}"], x, positions, first_layer + j,
+            causal=causal, enc_out=enc_out, mesh=mesh, dp_entry=dp_entry,
+            use_pallas=use_pallas, unroll=unroll)
+        aux_total = aux_total + aux
+        if want_cache:
+            caches[f"layer{j}"] = cache
+    return x, caches, aux_total
+
+
+# ---------------------------------------------------------------------------
+# whole-stack forward
+# ---------------------------------------------------------------------------
+
+def _remat_policy(name: str):
+    import jax.ad_checkpoint as adc
+    if name == "none":
+        return None
+    if name == "dots":
+        return jax.checkpoint_policies.checkpoint_dots
+    return jax.checkpoint_policies.nothing_saveable  # "full"
+
+
+def _encoder_forward(cfg: ModelConfig, params, frames, *, use_pallas=False,
+                     remat="none", unroll=False):
+    """frames: (B, S_enc, D) stub frame embeddings -> (B, S_enc, D)."""
+    enc_cfg = dataclasses.replace(cfg, attn_type="gqa", n_experts=0,
+                                  family="dense", block_pattern=1)
+    B, S_enc, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(S_enc, dtype=jnp.int32), (B, S_enc))
+
+    def body(x, bp):
+        x, _, _ = _superblock_forward(enc_cfg, bp, x, pos, 0, causal=False,
+                                      use_pallas=use_pallas, unroll=unroll)
+        return x, None
+
+    body = jax.checkpoint(body, policy=_remat_policy(remat))
+    if unroll:
+        x = frames
+        for i in range(cfg.n_enc_layers):
+            x, _ = body(x, jax.tree.map(lambda a: a[i],
+                                        params["enc_blocks"]))
+    else:
+        x, _ = lax.scan(body, frames, params["enc_blocks"])
+    return apply_norm(cfg, params["enc_norm"], x)
+
+
+def forward(cfg: ModelConfig, params, batch: Dict, *, mesh=None,
+            dp_entry=None, use_pallas=False, remat="none",
+            want_cache: bool = False, unroll: bool = False):
+    """Train / prefill forward.
+
+    batch: tokens (B, S_text); labels optional; frontend_embeds optional
+    (VLM: (B, S_img, D) early-fused prefix; audio: (B, S_enc, D) encoder
+    input). Returns (logits, aux_loss[, caches]) — ``caches`` holds the raw
+    per-layer prefill caches (k/v at sequence length) when requested;
+    serve/engine.py converts them to decode layout.
+    """
+    tokens = batch["tokens"]
+    B, S_text = tokens.shape
+    x = embed_tokens(cfg, params, tokens)
+
+    enc_out = None
+    if cfg.frontend == "vision_stub" and "frontend_embeds" in batch:
+        x = jnp.concatenate(
+            [batch["frontend_embeds"].astype(x.dtype), x], axis=1)
+    elif cfg.n_enc_layers and "frontend_embeds" in batch:
+        enc_out = _encoder_forward(cfg, params, batch["frontend_embeds"],
+                                   use_pallas=use_pallas, remat=remat,
+                                   unroll=unroll)
+
+    S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    aux_total = jnp.float32(0.0)
+    caches: Dict[str, Any] = {}
+    first = cfg.first_k_dense
+    if first:
+        dense_caches = {}
+        for i in range(first):
+            x, c, aux = _layer_forward(
+                cfg, params["dense_layers"][f"layer{i}"], x, positions, i,
+                causal=True, mesh=mesh, dp_entry=dp_entry,
+                use_pallas=use_pallas, unroll=unroll)
+            aux_total += aux
+            dense_caches[f"layer{i}"] = c
+        caches["dense_layers"] = dense_caches
+
+    def body(carry, bp):
+        x, aux = carry
+        x, c, a = _superblock_forward(
+            cfg, bp, x, positions, first, causal=True, enc_out=enc_out,
+            mesh=mesh, dp_entry=dp_entry, use_pallas=use_pallas,
+            want_cache=want_cache, unroll=unroll)
+        return (x, aux + a), (c if want_cache else None)
+
+    body = jax.checkpoint(body, policy=_remat_policy(remat))
+    if unroll:
+        nb = cfg.n_scan_blocks
+        ys = []
+        carry = (x, aux_total)
+        for b in range(nb):
+            carry, y = body(carry, jax.tree.map(lambda a: a[b],
+                                                params["blocks"]))
+            ys.append(y)
+        (x, aux_total) = carry
+        block_caches = (jax.tree.map(lambda *a: jnp.stack(a), *ys)
+                        if want_cache else None)
+    else:
+        (x, aux_total), block_caches = lax.scan(body, (x, aux_total),
+                                                params["blocks"])
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed(cfg, params, x)
+    if want_cache:
+        caches["blocks"] = block_caches
+        return logits, aux_total, caches
+    return logits, aux_total
+
+
+def loss_fn(cfg: ModelConfig, params, batch: Dict, *, mesh=None,
+            dp_entry=None, use_pallas=False, remat="none",
+            unroll: bool = False):
+    logits, aux = forward(cfg, params, batch, mesh=mesh, dp_entry=dp_entry,
+                          use_pallas=use_pallas, remat=remat, unroll=unroll)
+    labels = batch["labels"]
+    S_text = labels.shape[1]
+    # frontends prepend S_img positions; only text positions carry loss
+    logits_text = logits[:, -S_text:]
+    mask = batch.get("loss_mask")
+    ce = cross_entropy(logits_text, labels, mask)
+    loss = ce + cfg.router_aux_coef * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# caches / decode
+# ---------------------------------------------------------------------------
+
+def _layer_cache_shape(cfg: ModelConfig, i: int, B: int, S_max: int,
+                       enc_len: int = 0) -> Dict:
+    """abstract zero cache for one layer (decode path)."""
+    mixer, _ = layer_kind(cfg, i)
+    dt = jnp.dtype(cfg.dtype)
+    if mixer == "ssm":
+        di, K = cfg.d_inner, cfg.ssm_conv
+        G, N = cfg.ssm_groups, cfg.ssm_state
+        return {
+            "state": jnp.zeros((B, cfg.n_ssm_heads, cfg.ssm_head_dim, N),
+                               jnp.float32),
+            "conv_x": jnp.zeros((B, K - 1, di), dt),
+            "conv_B": jnp.zeros((B, K - 1, G * N), dt),
+            "conv_C": jnp.zeros((B, K - 1, G * N), dt),
+        }
+    if mixer == "mla":
+        width = cfg.kv_lora_rank + cfg.qk_rope_dim
+        return {"ckv": jnp.zeros((B, S_max, width), dt)}
+    KV, hd = cfg.n_kv_heads, cfg.d_head
+    S_cache = min(cfg.sliding_window, S_max) if cfg.attn_type == "swa" \
+        else S_max
+    c = {"k": jnp.zeros((B, S_cache, KV, hd), dt),
+         "v": jnp.zeros((B, S_cache, KV, hd), dt)}
+    if enc_len:
+        c["cross_k"] = jnp.zeros((B, enc_len, KV, hd), dt)
+        c["cross_v"] = jnp.zeros((B, enc_len, KV, hd), dt)
+    return c
+
+
+def init_cache(cfg: ModelConfig, B: int, S_max: int, enc_len: int = 0):
+    """Stacked decode caches: blocks subtree gains a leading scan dim."""
+    first = cfg.first_k_dense
+    cache: Dict[str, Any] = {}
+    if first:
+        cache["dense_layers"] = {
+            f"layer{i}": _layer_cache_shape(cfg, i, B, S_max, enc_len)
+            for i in range(first)
+        }
+    per_block = [
+        {f"layer{j}": _layer_cache_shape(cfg, first + b * cfg.block_pattern
+                                         + j, B, S_max, enc_len)
+         for j in range(cfg.block_pattern)}
+        for b in range(cfg.n_scan_blocks)
+    ]
+    cache["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per_block)
+    return cache
+
+
+def _layer_decode(cfg: ModelConfig, p: Dict, x, cache: Dict, t, i: int, *,
+                  mesh=None, dp_entry=None):
+    mixer, ff = layer_kind(cfg, i)
+    h = apply_norm(cfg, p["norm1"], x)
+    if mixer == "ssm":
+        out, new_cache = ssm_mod.ssm_decode(cfg, p["ssm"], h, cache)
+    elif mixer == "mla":
+        out, new_cache = attn.mla_decode(cfg, p["attn"], h, cache, t,
+                                         mesh=mesh, dp_entry=dp_entry)
+    else:
+        out, new_cache = attn.attention_decode(cfg, p["attn"], h, cache, t,
+                                               mesh=mesh, dp_entry=dp_entry)
+        if "cross_k" in cache:
+            new_cache["cross_k"] = cache["cross_k"]
+            new_cache["cross_v"] = cache["cross_v"]
+    x = x + out
+
+    if "cross" in p and "cross_k" in cache:
+        h = apply_norm(cfg, p["norm_x"], x)
+        B = h.shape[0]
+        H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+        q = (h @ p["cross"]["wq"]).reshape(B, H, hd)
+        enc_len = cache["cross_k"].shape[1]
+        o, l, m = attn._decode_partials(
+            q, cache["cross_k"], cache["cross_v"],
+            jnp.arange(enc_len), enc_len)
+        o = attn.combine_partials(o, l, m, None).reshape(B, 1, H * hd)
+        x = x + o.astype(x.dtype) @ p["cross"]["wo"]
+
+    if ff != "none":
+        h = apply_norm(cfg, p["norm2"], x)
+        if ff == "moe":
+            y, _ = moe_mod.moe_forward(cfg, p["moe"], h, mesh=mesh,
+                                       dp_entry=dp_entry)
+        else:
+            y = apply_mlp(p["mlp"], h)
+        x = x + y
+    return x, new_cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens_t, t, *, mesh=None,
+                dp_entry=None, unroll: bool = False):
+    """One decode step. tokens_t: (B, 1); t: scalar current length.
+    Returns (logits (B, 1, V), new_cache)."""
+    x = embed_tokens(cfg, params, tokens_t)
+    first = cfg.first_k_dense
+    if first:
+        new_dense = {}
+        for i in range(first):
+            x, nc = _layer_decode(cfg, params["dense_layers"][f"layer{i}"],
+                                  x, cache["dense_layers"][f"layer{i}"],
+                                  t, i, mesh=mesh, dp_entry=dp_entry)
+            new_dense[f"layer{i}"] = nc
+    else:
+        new_dense = None
+
+    def body(x, block):
+        bp, bc = block
+        new_c = {}
+        xx = x
+        for j in range(cfg.block_pattern):
+            xx, nc = _layer_decode(cfg, bp[f"layer{j}"], xx, bc[f"layer{j}"],
+                                   t, first + j, mesh=mesh,
+                                   dp_entry=dp_entry)
+            new_c[f"layer{j}"] = nc
+        return xx, new_c
+
+    if unroll:
+        ys = []
+        for b in range(cfg.n_scan_blocks):
+            x, y = body(x, jax.tree.map(lambda a: a[b],
+                                        (params["blocks"],
+                                         cache["blocks"])))
+            ys.append(y)
+        new_blocks = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        x, new_blocks = lax.scan(body, x,
+                                 (params["blocks"], cache["blocks"]))
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed(cfg, params, x)
+    new_cache = {"blocks": new_blocks}
+    if new_dense is not None:
+        new_cache["dense_layers"] = new_dense
+    return logits, new_cache
+
+
+def prefill(cfg: ModelConfig, params, batch: Dict, *, mesh=None,
+            dp_entry=None, use_pallas=False, unroll: bool = False):
+    """Full-sequence forward returning last-token logits. (Cache assembly for
+    prefill→decode handoff lives in serve/engine.py; the dry-run's prefill
+    cell lowers exactly this program.)"""
+    logits, _ = forward(cfg, params, batch, mesh=mesh, dp_entry=dp_entry,
+                        use_pallas=use_pallas, remat="none", unroll=unroll)
+    return logits[:, -1:]

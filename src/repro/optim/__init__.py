@@ -1,0 +1,3 @@
+from repro.optim.adamw import (AdamWState, adamw_init, adamw_update,
+                               lr_schedule, global_norm, clip_by_global_norm)
+from repro.optim.compress import compress_int8, decompress_int8

@@ -1,0 +1,95 @@
+"""AdamW with ZeRO-style sharded moments.
+
+Moments inherit the parameter sharding (the sharding layer fully shards the
+big leaves over data×model, so optimizer state is ZeRO-sharded for free —
+the per-leaf reduce-scatter of FSDP gradients is the training-loop analogue
+of the paper's "push partial results early": gradient communication happens
+per scanned super-block inside the backward pass, not as one fused
+end-of-step all-reduce).
+
+``moment_dtype="bfloat16"`` halves optimizer memory for the 400B-class archs
+(error analysis: second-moment bf16 rounding is dominated by eps at the
+magnitudes LM training sees; first moment keeps a stochastic-rounding-free
+bf16 with fp32 math at update time).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any                      # first moment (param pytree)
+    nu: Any                      # second moment (param pytree)
+
+
+def adamw_init(params, cfg: TrainConfig) -> AdamWState:
+    mdt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def lr_schedule(cfg: TrainConfig, step):
+    """Linear warmup → cosine decay to 10%."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.1 + 0.45 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adamw_update(params, grads, state: AdamWState, cfg: TrainConfig):
+    """Returns (new_params, new_state, metrics). ``grad_clip <= 0`` disables
+    clipping (but still reports the norm)."""
+    if cfg.grad_clip > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+    step = state.step + 1
+    lr = lr_schedule(cfg, step)
+    b1, b2, eps = cfg.b1, cfg.b2, cfg.eps
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        vf = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        mhat = mf / bc1
+        vhat = vf / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + cfg.weight_decay \
+            * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * delta
+        return new_p.astype(p.dtype), mf.astype(mdt), vf.astype(mdt)
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, AdamWState(step, new_mu, new_nu), {
+        "grad_norm": gnorm, "lr": lr}

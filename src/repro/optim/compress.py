@@ -1,0 +1,51 @@
+"""int8 gradient compression with fp32 error feedback.
+
+At 1000+-node scale the cross-pod DCN link is ~10× thinner than in-pod ICI,
+so the pod-axis gradient all-reduce is the one worth compressing. The
+scheme: per-leaf symmetric int8 quantization, residual kept locally and
+added back next step (error feedback keeps the quantization bias out of the
+long-run gradient estimate). Applied only to the ``pod`` axis reduction
+(train/train_step.py wires it in when ``compress_cross_pod=True``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(x: jnp.ndarray):
+    """x (fp) -> (int8 codes, fp32 scale). Symmetric, per-tensor."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jnp.ndarray, scale: jnp.ndarray,
+                    dtype=jnp.float32) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def ef_compress_leaf(g: jnp.ndarray, residual: jnp.ndarray):
+    """One error-feedback round: returns (decompressed g_hat, new_residual).
+
+    g_hat is what actually crosses the wire (int8 + one scale); the residual
+    (g - g_hat) stays local and is folded into the next step's gradient.
+    """
+    g_corr = g.astype(jnp.float32) + residual
+    q, scale = compress_int8(g_corr)
+    g_hat = decompress_int8(q, scale)
+    return g_hat.astype(g.dtype), g_corr - g_hat
+
+
+def ef_compress(grads, residuals):
+    flat_g, tree = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residuals)
+    outs = [ef_compress_leaf(g, r) for g, r in zip(flat_g, flat_r)]
+    g_hat = jax.tree.unflatten(tree, [o[0] for o in outs])
+    new_res = jax.tree.unflatten(tree, [o[1] for o in outs])
+    return g_hat, new_res
+
+
+def init_residuals(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

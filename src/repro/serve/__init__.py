@@ -1,0 +1,2 @@
+from repro.serve.engine import (ServeEngine, prefill_to_decode_cache,
+                                make_serve_step)

@@ -1,0 +1,163 @@
+"""Serving engine: prefill → batched decode with KV-cache management.
+
+``make_serve_step`` builds the exact one-token program the decode dry-run
+cells lower (``serve_step``, not ``train_step``): one new token against a
+seq_len-sized cache. ``ServeEngine`` wraps it for the example drivers:
+batched requests, greedy/temperature sampling, early-stop bookkeeping —
+request batching amortizes the weight reads that dominate decode
+(memory-roofline term, see EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.config import ModelConfig
+from repro.models import transformer as tf
+from repro.models.transformer import layer_kind
+
+
+# ---------------------------------------------------------------------------
+# prefill cache -> decode cache layout
+# ---------------------------------------------------------------------------
+
+def _convert_layer(cfg: ModelConfig, kind: str, raw: Dict, S: int,
+                   S_max: int) -> Dict:
+    """raw prefill cache (seq length S) -> decode layout (capacity S_max)."""
+    out = {}
+    if kind == "ssm":
+        return raw  # state + conv carries are already the decode layout
+    if kind == "mla":
+        ckv = raw["ckv"]
+        pad = [(0, 0), (0, S_max - S), (0, 0)]
+        return {"ckv": jnp.pad(ckv, pad)}
+    # gqa / swa
+    if cfg.attn_type == "swa":
+        W = min(cfg.sliding_window, S_max)
+        n = min(S, W)
+        pos = jnp.arange(S - n, S)          # absolute positions kept
+        slots = pos % W
+        for name in ("k", "v"):
+            ring = jnp.zeros((raw[name].shape[0], W) + raw[name].shape[2:],
+                             raw[name].dtype)
+            out[name] = ring.at[:, slots].set(raw[name][:, S - n:])
+    else:
+        for name in ("k", "v"):
+            pad = [(0, 0), (0, S_max - S)] + [(0, 0)] * (raw[name].ndim - 2)
+            out[name] = jnp.pad(raw[name], pad)
+    for name in ("cross_k", "cross_v"):
+        if name in raw:
+            out[name] = raw[name]
+    return out
+
+
+def prefill_to_decode_cache(cfg: ModelConfig, caches: Dict, S: int,
+                            S_max: int) -> Dict:
+    """Convert ``forward(want_cache=True)`` output to ``decode_step`` layout."""
+    first = cfg.first_k_dense
+    out: Dict[str, Any] = {}
+    if first:
+        out["dense_layers"] = {
+            f"layer{i}": _convert_layer(
+                cfg, layer_kind(cfg, i)[0],
+                caches["dense_layers"][f"layer{i}"], S, S_max)
+            for i in range(first)
+        }
+
+    def per_block(block_cache):
+        return {
+            f"layer{j}": _convert_layer(
+                cfg, layer_kind(cfg, first + j)[0],
+                block_cache[f"layer{j}"], S, S_max)
+            for j in range(cfg.block_pattern)
+        }
+
+    # blocks subtree is stacked (nb, ...) — convert under vmap so the layout
+    # transform applies per block without unstacking
+    out["blocks"] = jax.vmap(per_block)(caches["blocks"])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the dry-run serve_step program
+# ---------------------------------------------------------------------------
+
+def make_serve_step(cfg: ModelConfig, *, mesh=None, dp_entry=None,
+                    unroll: bool = False):
+    """serve_step(params, cache, tokens_t (B,1), t) -> (logits, cache).
+
+    This is the program the decode dry-run cells lower: one new token with a
+    KV cache of seq_len.
+    """
+    def serve_step(params, cache, tokens_t, t):
+        return tf.decode_step(cfg, params, cache, tokens_t, t,
+                              mesh=mesh, dp_entry=dp_entry, unroll=unroll)
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ServeEngine:
+    """Batched request serving over one model replica."""
+    cfg: ModelConfig
+    params: Any
+    max_len: int
+    mesh: Any = None
+    dp_entry: Any = None
+    eos_id: int = -1
+
+    def __post_init__(self):
+        self._step = jax.jit(make_serve_step(self.cfg, mesh=self.mesh,
+                                             dp_entry=self.dp_entry))
+        self._prefill = jax.jit(partial(
+            tf.forward, self.cfg, mesh=self.mesh, dp_entry=self.dp_entry,
+            want_cache=True))
+
+    def generate(self, prompts: np.ndarray, n_new: int, *,
+                 frontend_embeds: Optional[np.ndarray] = None,
+                 greedy: bool = True, temperature: float = 1.0,
+                 seed: int = 0):
+        """prompts: (B, S_prompt) int32 (same length; pad upstream).
+        Returns (B, n_new) generated ids."""
+        B, S = prompts.shape
+        batch = {"tokens": jnp.asarray(prompts)}
+        enc_len = 0
+        if frontend_embeds is not None:
+            batch["frontend_embeds"] = jnp.asarray(frontend_embeds)
+            if self.cfg.n_enc_layers:
+                enc_len = frontend_embeds.shape[1]
+        logits, _, raw = self._prefill(self.params, batch)
+        S_ctx = S + (batch["frontend_embeds"].shape[1]
+                     if self.cfg.frontend == "vision_stub"
+                     and frontend_embeds is not None else 0)
+        cache = prefill_to_decode_cache(self.cfg, raw, S_ctx, self.max_len)
+
+        key = jax.random.PRNGKey(seed)
+        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+        outs = [tok]
+        done = np.zeros((B,), bool)
+        for step in range(n_new - 1):
+            logits, cache = self._step(self.params, cache, tok,
+                                       jnp.int32(S_ctx + step))
+            if greedy:
+                tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+            else:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(
+                    sub, logits[:, -1] / temperature)[:, None].astype(
+                        jnp.int32)
+            outs.append(tok)
+            if self.eos_id >= 0:
+                done |= np.asarray(tok[:, 0] == self.eos_id)
+                if done.all():
+                    break
+        return np.concatenate([np.asarray(o) for o in outs], axis=1)

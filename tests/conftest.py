@@ -1,0 +1,46 @@
+"""Shared test helpers.
+
+NOTE: no XLA_FLAGS here on purpose — unit/smoke tests run on the 1 real CPU
+device. Multi-device integration tests spawn subprocesses that set
+``--xla_force_host_platform_device_count`` before importing jax.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_devices(code: str, n_devices: int = 8, timeout: int = 560) -> str:
+    """Run ``code`` in a subprocess with n placeholder CPU devices.
+
+    The snippet should print its assertions' evidence; raises on non-zero
+    exit with captured output in the message.
+    """
+    prelude = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = (
+            "--xla_force_host_platform_device_count={n_devices}")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", prelude + textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={proc.returncode})\n--- stdout ---\n"
+            f"{proc.stdout[-4000:]}\n--- stderr ---\n{proc.stderr[-4000:]}")
+    return proc.stdout
+
+
+@pytest.fixture(scope="session")
+def devices8():
+    def run(code: str, n_devices: int = 8, **kw) -> str:
+        return run_devices(code, n_devices, **kw)
+    return run

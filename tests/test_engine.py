@@ -1,0 +1,195 @@
+"""Integration tests for the MapReduce engines on an 8-device mesh.
+
+Each test spawns one subprocess with 8 placeholder CPU devices (the main
+pytest process keeps the single real device, per the dry-run isolation
+rule) and verifies exact results vs a host oracle.
+"""
+import pytest
+
+
+def test_wordcount_both_backends_exact(devices8):
+    out = devices8("""
+        import numpy as np
+        from collections import Counter
+        from repro.core.wordcount import WordCount
+        rng = np.random.default_rng(0)
+        for VOCAB, N, task, cap in [(1000, 65536, 2048, 1024),
+                                    (127, 8192, 512, 64),
+                                    (4096, 50000, 1250, 256)]:
+            tokens = rng.integers(0, VOCAB, size=N).astype(np.int32)
+            oracle = dict(Counter(tokens.tolist()))
+            for backend in ("1s", "2s"):
+                job = WordCount(backend=backend)
+                job.init(tokens, vocab=VOCAB, task_size=task, push_cap=cap,
+                         n_procs=8)
+                job.run()
+                assert job.result_dict() == oracle, (VOCAB, N, backend)
+        print("EXACT")
+    """)
+    assert "EXACT" in out
+
+
+def test_wordcount_unbalanced_workload_exact(devices8):
+    """The paper's imbalance model (footnote 5): a task is *computed*
+    ``repeat`` times while its input is read once — so the result must stay
+    exactly the balanced result, for both engines."""
+    out = devices8("""
+        import numpy as np
+        from collections import Counter
+        from repro.core.wordcount import WordCount
+        from repro.data.corpus import imbalance_repeats
+        rng = np.random.default_rng(1)
+        VOCAB, N, P = 500, 32768, 8
+        tokens = rng.integers(0, VOCAB, size=N).astype(np.int32)
+        task = 512
+        T = N // task // P
+        reps = imbalance_repeats(P, T, mode="unbalanced", hot_factor=4,
+                                 hot_fraction=0.25)
+        assert reps.max() == 4 and reps.min() == 1
+        oracle = dict(Counter(tokens.tolist()))
+        for backend in ("1s", "2s"):
+            job = WordCount(backend=backend)
+            job.init(tokens, vocab=VOCAB, task_size=task, push_cap=2048,
+                     n_procs=P, repeats=reps)
+            job.run()
+            assert job.result_dict() == oracle, backend
+        print("EXACT-UNBALANCED")
+    """)
+    assert "EXACT-UNBALANCED" in out
+
+
+def test_backends_agree_and_sorted(devices8):
+    out = devices8("""
+        import numpy as np
+        from repro.core.wordcount import WordCount
+        from repro.core.kv import KEY_SENTINEL
+        rng = np.random.default_rng(7)
+        tokens = rng.integers(0, 300, size=16384).astype(np.int32)
+        res = {}
+        for backend in ("1s", "2s"):
+            job = WordCount(backend=backend)
+            job.init(tokens, vocab=300, task_size=1024, push_cap=512,
+                     n_procs=8)
+            keys, vals = job.run()
+            valid = keys != int(KEY_SENTINEL)
+            assert (np.diff(keys[valid]) > 0).all()   # Combine returns sorted
+            res[backend] = (keys[valid].tolist(), vals[valid].tolist())
+        assert res["1s"] == res["2s"]
+        print("AGREE")
+    """)
+    assert "AGREE" in out
+
+
+def test_push_cap_overflow_ownership_transfer(devices8):
+    """With a tiny push_cap most records overflow → stay owner-local and be
+    folded during Combine (paper footnote 2). Result must stay exact."""
+    out = devices8("""
+        import numpy as np
+        from collections import Counter
+        from repro.core.wordcount import WordCount
+        rng = np.random.default_rng(2)
+        # skewed keys: heavy hitters overflow the per-owner bucket cap
+        tokens = rng.zipf(1.2, size=32768).astype(np.int32) % 100
+        tokens = tokens.astype(np.int32)
+        oracle = dict(Counter(tokens.tolist()))
+        for backend in ("1s", "2s"):
+            job = WordCount(backend=backend)
+            job.init(tokens, vocab=100, task_size=1024, push_cap=4,
+                     n_procs=8)
+            job.run()
+            assert job.result_dict() == oracle, backend
+        print("OVERFLOW-EXACT")
+    """)
+    assert "OVERFLOW-EXACT" in out
+
+
+def test_segmented_engine_matches_monolithic(devices8):
+    """run_segments (the checkpointable path) == run_job, segment by
+    segment, including a simulated restart from a mid-job snapshot."""
+    out = devices8("""
+        import numpy as np, jax
+        from collections import Counter
+        from repro.core import onesided
+        from repro.core.api import JobSpec
+        from repro.core.wordcount import WordCount
+        from repro.core.kv import KEY_SENTINEL
+        from repro.distributed.mesh import local_mesh
+
+        rng = np.random.default_rng(5)
+        VOCAB, N, P, task = 400, 32768, 8, 512
+        tokens = rng.integers(0, VOCAB, size=N).astype(np.int32)
+        oracle = dict(Counter(tokens.tolist()))
+
+        job = WordCount(backend="1s")
+        job.init(tokens, vocab=VOCAB, task_size=task, push_cap=1024,
+                 n_procs=P)
+        spec, mesh = job.spec, job.mesh
+        toks, reps = job._tokens, job._repeats
+        T = toks.shape[1]
+        init_fn, seg_fn, fin_fn = onesided.make_segment_fns(
+            spec, job.map_task, mesh)
+        carry = init_fn()
+        seg = 2
+        snapshots = []
+        for s in range(0, T, seg):
+            tok_s = toks[:, s:s + seg]
+            rep_s = reps[:, s:s + seg]
+            carry = seg_fn(carry, tok_s, rep_s)
+            snapshots.append(jax.tree.map(np.asarray, carry))
+        keys, vals = fin_fn(carry)
+        keys, vals = np.asarray(keys)[0], np.asarray(vals)[0]
+        valid = keys != int(KEY_SENTINEL)
+        got = dict(zip(keys[valid].tolist(), vals[valid].tolist()))
+        assert got == oracle, "segmented != oracle"
+
+        # restart: resume from snapshot after segment 1 and replay the rest
+        carry2 = jax.tree.map(lambda a: a, snapshots[0])   # restored copy
+        for s in range(seg, T, seg):
+            carry2 = seg_fn(carry2, toks[:, s:s+seg], reps[:, s:s+seg])
+        k2, v2 = fin_fn(carry2)
+        k2, v2 = np.asarray(k2)[0], np.asarray(v2)[0]
+        assert (k2 == keys).all() and (v2 == vals).all(), "restart mismatch"
+        print("SEGMENTED-EXACT")
+    """, timeout=560)
+    assert "SEGMENTED-EXACT" in out
+
+
+def test_tree_combine_multiproc_sorted_merge(devices8):
+    out = devices8("""
+        import numpy as np, jax, jax.numpy as jnp
+        from functools import partial
+        from jax.sharding import PartitionSpec as P
+        from repro.core.combine import tree_combine
+        from repro.core.kv import KEY_SENTINEL
+        from repro.distributed.mesh import local_mesh
+        mesh = local_mesh((8,), ("procs",))
+        rng = np.random.default_rng(11)
+        # per-proc sorted unique keys; capacity W covers the merged union
+        K, W = 32, 256
+        keys = np.full((8, W), int(KEY_SENTINEL), np.int32)
+        vals = np.zeros((8, W), np.int32)
+        oracle = {}
+        for p in range(8):
+            ks = np.sort(rng.choice(200, size=rng.integers(5, K),
+                                    replace=False)).astype(np.int32)
+            keys[p, :len(ks)] = ks
+            vals[p, :len(ks)] = p + 1
+            for k in ks:
+                oracle[int(k)] = oracle.get(int(k), 0) + p + 1
+
+        def body(k, v):
+            kk, vv = tree_combine(k[0], v[0], "procs", 8)
+            return kk[None], vv[None]
+
+        fn = jax.jit(jax.shard_map(body, mesh=mesh,
+                                   in_specs=(P("procs"), P("procs")),
+                                   out_specs=(P("procs"), P("procs"))))
+        ok, ov = fn(keys, vals)
+        ok, ov = np.asarray(ok)[0], np.asarray(ov)[0]
+        valid = ok != int(KEY_SENTINEL)
+        got = dict(zip(ok[valid].tolist(), ov[valid].tolist()))
+        assert got == oracle
+        assert (np.diff(ok[valid]) > 0).all()
+        print("COMBINE-OK")
+    """)
+    assert "COMBINE-OK" in out

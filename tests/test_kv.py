@@ -1,0 +1,124 @@
+"""Property tests for the key-value record machinery (core/kv.py).
+
+These are the system invariants the engines rely on:
+  * local_reduce is an exact groupby-sum (vs a numpy oracle), key-sorted,
+    sentinel-padded;
+  * bucketize partitions records by owner hash, conserving every record
+    either into a bucket or the overflow set;
+  * merge_sorted(a, b) == local_reduce(a ++ b);
+  * mix32 is bijective (no owner-collision bias beyond hashing).
+"""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.kv import (KEY_SENTINEL, bucketize, local_reduce,
+                           merge_sorted, mix32, owner_of)
+
+SENT = int(KEY_SENTINEL)
+
+
+def np_groupby(keys, vals):
+    out = {}
+    for k, v in zip(keys.tolist(), vals.tolist()):
+        if k != SENT:
+            out[k] = out.get(k, 0) + v
+    return out
+
+
+keys_strategy = st.lists(
+    st.one_of(st.integers(0, 50), st.just(SENT)), min_size=1, max_size=200)
+
+
+@given(keys_strategy, st.integers(0, 3))
+@settings(max_examples=60, deadline=None)
+def test_local_reduce_matches_groupby(ks, extra_cap):
+    keys = np.array(ks, np.int32)
+    vals = np.arange(1, len(ks) + 1, dtype=np.int32)
+    oracle = np_groupby(keys, vals)
+    cap = len(oracle) + extra_cap if oracle else 1 + extra_cap
+    uk, uv, n = local_reduce(jnp.array(keys), jnp.array(vals), cap)
+    uk, uv = np.asarray(uk), np.asarray(uv)
+    assert int(n) == len(oracle)
+    got = {int(k): int(v) for k, v in zip(uk, uv) if k != SENT}
+    assert got == oracle
+    valid = uk[uk != SENT]
+    assert (np.diff(valid) > 0).all()           # sorted unique
+    assert (uk[len(oracle):] == SENT).all()     # padding clean
+    assert (uv[len(oracle):] == 0).all()
+
+
+@given(keys_strategy)
+@settings(max_examples=40, deadline=None)
+def test_local_reduce_capacity_overflow_keeps_smallest(ks):
+    keys = np.array(ks, np.int32)
+    vals = np.ones(len(ks), np.int32)
+    oracle = np_groupby(keys, vals)
+    if len(oracle) < 2:
+        return
+    cap = max(1, len(oracle) // 2)
+    uk, uv, n = local_reduce(jnp.array(keys), jnp.array(vals), cap)
+    uk = np.asarray(uk)
+    assert int(n) == len(oracle)                # reports true unique count
+    kept = sorted(oracle)[:cap]
+    assert [int(k) for k in uk if k != SENT] == kept
+
+
+@given(st.lists(st.integers(0, 1000), min_size=1, max_size=300),
+       st.integers(2, 8), st.integers(1, 64))
+@settings(max_examples=60, deadline=None)
+def test_bucketize_conserves_records(ks, P, cap):
+    keys = np.array(ks, np.int32)
+    vals = np.arange(1, len(ks) + 1, dtype=np.int32)
+    bk, bv, counts, (ofk, ofv) = bucketize(jnp.array(keys), jnp.array(vals),
+                                           P, cap)
+    bk, bv = np.asarray(bk), np.asarray(bv)
+    ofk, ofv = np.asarray(ofk), np.asarray(ofv)
+    owners = np.asarray(owner_of(jnp.array(keys), P))
+    # every record lands exactly once: bucket sums + overflow sums == input
+    total_in = np_groupby(keys, vals)
+    got = np_groupby(np.concatenate([bk.reshape(-1), ofk]),
+                     np.concatenate([bv.reshape(-1), ofv]))
+    assert got == total_in
+    # bucket p only holds keys owned by p
+    for p in range(P):
+        bucket_keys = bk[p][bk[p] != SENT]
+        if bucket_keys.size:
+            assert (np.asarray(owner_of(jnp.array(bucket_keys), P)) == p).all()
+    # counts consistent with fill
+    fill = (bk != SENT).sum(axis=1)
+    assert (np.asarray(counts) == fill).all()
+
+
+@given(st.lists(st.integers(0, 30), min_size=0, max_size=60),
+       st.lists(st.integers(0, 30), min_size=0, max_size=60))
+@settings(max_examples=40, deadline=None)
+def test_merge_sorted_equals_local_reduce_of_concat(a, b):
+    cap = 64
+    ka = np.array(a + [SENT] * (60 - len(a)), np.int32)
+    kb = np.array(b + [SENT] * (60 - len(b)), np.int32)
+    va = np.ones(60, np.int32)
+    vb = np.ones(60, np.int32) * 2
+    va[len(a):] = 0
+    vb[len(b):] = 0
+    mk, mv = merge_sorted(jnp.array(ka), jnp.array(va), jnp.array(kb),
+                          jnp.array(vb), cap)
+    ok, ov, _ = local_reduce(jnp.concatenate([jnp.array(ka), jnp.array(kb)]),
+                             jnp.concatenate([jnp.array(va), jnp.array(vb)]),
+                             cap)
+    np.testing.assert_array_equal(np.asarray(mk), np.asarray(ok))
+    np.testing.assert_array_equal(np.asarray(mv), np.asarray(ov))
+
+
+def test_mix32_bijective_on_range():
+    xs = jnp.arange(1 << 16, dtype=jnp.uint32)
+    h = np.asarray(mix32(xs))
+    assert np.unique(h).size == xs.size
+
+
+def test_owner_spread_uniform():
+    P = 16
+    owners = np.asarray(owner_of(jnp.arange(100_000, dtype=jnp.int32), P))
+    counts = np.bincount(owners, minlength=P)
+    assert counts.min() > 0.8 * counts.mean()
+    assert counts.max() < 1.2 * counts.mean()

@@ -1,0 +1,145 @@
+"""MoE dispatch: the paper's technique as an in-model feature.
+
+Invariants:
+  * "1s" (decoupled pipelined) and "2s" (bulk) dispatch compute the SAME
+    function — only the schedule differs (paper: same bytes, overlapped);
+  * both match a dense (no-dispatch) oracle that runs every expert on every
+    token and mixes with the router gates (when capacity admits all tokens);
+  * routing respects top_k; aux loss is the switch load-balancing loss;
+  * the sharded (8-device) dispatch matches the unpartitioned reference.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_smoke_config
+from repro.models import moe as moe_mod
+
+
+def _cfg(**kw):
+    base = get_smoke_config("llama4-maverick-400b-a17b")
+    kw.setdefault("dtype", "float32")
+    kw.setdefault("param_dtype", "float32")
+    kw.setdefault("capacity_factor", 8.0)     # no drops for oracle equality
+    return dataclasses.replace(base, **kw)
+
+
+def _dense_oracle(cfg, p, x):
+    """Every expert on every token, gate-mixed — exact when nothing drops."""
+    T, D = x.shape
+    logits = x.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    gates, ids = jax.lax.top_k(probs, cfg.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    g = jax.nn.silu(jnp.einsum("td,edf->tef", x, p["we_gate"]))
+    h = jnp.einsum("td,edf->tef", x, p["we_in"])
+    out_all = jnp.einsum("tef,efd->ted", g * h, p["we_out"])
+    y = jnp.zeros_like(x)
+    for j in range(cfg.top_k):
+        y += jnp.take_along_axis(
+            out_all, ids[:, j][:, None, None], 1)[:, 0] * gates[:, j][:, None]
+    return y
+
+
+@pytest.mark.parametrize("mode,topk", [("1s", 1), ("2s", 1),
+                                       ("1s", 2), ("2s", 2)])
+def test_dispatch_matches_dense_oracle(mode, topk):
+    cfg = _cfg(dispatch_mode=mode, top_k=topk, dispatch_groups=2)
+    p = moe_mod.init_moe(cfg, jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (2, 16, cfg.d_model),
+                          jnp.float32)
+    y, aux = moe_mod.moe_forward(cfg, p, x)
+    want = _dense_oracle(cfg, p, x.reshape(-1, cfg.d_model))
+    if cfg.n_shared_experts:
+        xs = x.reshape(-1, cfg.d_model)
+        want = want + (jax.nn.silu(xs @ p["ws_gate"]) * (xs @ p["ws_in"])
+                       ) @ p["ws_out"]
+    np.testing.assert_allclose(np.asarray(y).reshape(-1, cfg.d_model),
+                               np.asarray(want), atol=1e-4, rtol=1e-4)
+    assert np.isfinite(float(aux))
+
+
+def test_1s_equals_2s_exactly():
+    """The decoupled schedule must be a pure re-ordering: same result."""
+    for topk in (1, 2):
+        cfg1 = _cfg(dispatch_mode="1s", top_k=topk, dispatch_groups=4)
+        cfg2 = dataclasses.replace(cfg1, dispatch_mode="2s")
+        p = moe_mod.init_moe(cfg1, jax.random.key(2))
+        x = jax.random.normal(jax.random.key(3), (1, 32, cfg1.d_model),
+                              jnp.float32)
+        y1, a1 = moe_mod.moe_forward(cfg1, p, x)
+        y2, a2 = moe_mod.moe_forward(cfg2, p, x)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(float(a1), float(a2), rtol=1e-6)
+
+
+def test_aux_loss_balanced_is_one():
+    """Perfectly uniform routing → switch aux loss == 1 (its minimum)."""
+    cfg = _cfg(top_k=1)
+    E = cfg.n_experts
+    T = 64 * E
+    probs = jnp.full((T, E), 1.0 / E)
+    ids = jnp.tile(jnp.arange(E, dtype=jnp.int32), T // E)[:, None]
+    aux = moe_mod._aux_loss(cfg, probs, ids)
+    np.testing.assert_allclose(float(aux), 1.0, rtol=1e-5)
+
+
+def test_capacity_drops_keep_residual_semantics():
+    """With capacity_factor → 0 almost everything drops; output ≈ 0 (dropped
+    tokens contribute nothing — their residual passes through upstream)."""
+    cfg = _cfg(dispatch_mode="2s", top_k=1, capacity_factor=0.01,
+               n_shared_experts=0)
+    p = moe_mod.init_moe(cfg, jax.random.key(4))
+    x = jax.random.normal(jax.random.key(5), (1, 64, cfg.d_model),
+                          jnp.float32)
+    y, _ = moe_mod.moe_forward(cfg, p, x)
+    dense = _dense_oracle(cfg, p, x.reshape(-1, cfg.d_model))
+    assert float(jnp.abs(y).sum()) < float(jnp.abs(dense).sum())
+
+
+def test_sharded_dispatch_matches_reference(devices8):
+    out = devices8("""
+        import dataclasses
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.configs.registry import get_smoke_config
+        from repro.models import moe as moe_mod
+        from repro.distributed.mesh import local_mesh
+
+        base = get_smoke_config("llama4-maverick-400b-a17b")
+        for mode in ("1s", "2s"):
+            cfg = dataclasses.replace(
+                base, dtype="float32", param_dtype="float32",
+                dispatch_mode=mode, top_k=2, capacity_factor=8.0,
+                dispatch_groups=2)
+            p = moe_mod.init_moe(cfg, jax.random.key(0))
+            # mesh (data=2, model=4): experts 8 -> 2 per shard; seq 32 -> 8
+            mesh = local_mesh((2, 4), ("data", "model"))
+            x = jax.random.normal(jax.random.key(1), (2, 32, cfg.d_model),
+                                  jnp.float32)
+            y_ref, aux_ref = moe_mod.moe_forward(cfg, p, x)
+            y_sh, aux_sh = moe_mod.moe_forward(cfg, p, x, mesh=mesh,
+                                               dp_entry="data")
+            np.testing.assert_allclose(np.asarray(y_sh), np.asarray(y_ref),
+                                       atol=1e-4, rtol=1e-4)
+            np.testing.assert_allclose(float(aux_sh), float(aux_ref),
+                                       rtol=1e-5)
+        # decode path: S=1 token, replicated dispatch
+        cfg = dataclasses.replace(base, dtype="float32",
+                                  param_dtype="float32", top_k=2,
+                                  capacity_factor=8.0)
+        p = moe_mod.init_moe(cfg, jax.random.key(2))
+        mesh = local_mesh((2, 4), ("data", "model"))
+        x1 = jax.random.normal(jax.random.key(3), (2, 1, cfg.d_model),
+                               jnp.float32)
+        y_ref, _ = moe_mod.moe_forward(cfg, p, x1)
+        y_sh, _ = moe_mod.moe_forward(cfg, p, x1, mesh=mesh,
+                                      dp_entry="data")
+        np.testing.assert_allclose(np.asarray(y_sh), np.asarray(y_ref),
+                                   atol=1e-4, rtol=1e-4)
+        print("MOE-SHARDED-OK")
+    """)
+    assert "MOE-SHARDED-OK" in out

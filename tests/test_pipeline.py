@@ -1,0 +1,94 @@
+"""Pipeline parallelism (GPipe over the pod axis): exact equivalence with
+the non-pipelined loss/grads, and a 2-step PP training run."""
+import pytest
+
+
+def test_gpipe_matches_reference_loss_and_grads(devices8):
+    out = devices8("""
+        import dataclasses
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding
+        from repro.config import MeshConfig
+        from repro.configs.registry import get_smoke_config
+        from repro.distributed.mesh import local_mesh
+        from repro.distributed.pipeline import gpipe_loss_fn, pp_param_specs
+        from repro.models.transformer import init_model, loss_fn
+
+        cfg = dataclasses.replace(get_smoke_config("olmo-1b"),
+                                  dtype="float32", param_dtype="float32")
+        mesh = local_mesh((2, 2), ("pod", "data"))
+        mesh_cfg = MeshConfig((2, 2), ("pod", "data"))
+        params = init_model(cfg, jax.random.key(0))
+        rng = np.random.default_rng(0)
+        batch = {"tokens": jnp.asarray(
+                    rng.integers(0, cfg.vocab_size, (8, 32)), jnp.int32),
+                 "labels": jnp.asarray(
+                    rng.integers(0, cfg.vocab_size, (8, 32)), jnp.int32)}
+        ref_loss, _ = loss_fn(cfg, params, batch)
+        specs = pp_param_specs(jax.eval_shape(lambda: params), cfg,
+                               mesh_cfg)
+        p_sh = jax.device_put(params, jax.tree.map(
+            lambda s: NamedSharding(mesh, s), specs))
+        for M in (2, 4, 8):
+            pp = jax.jit(lambda p, b: gpipe_loss_fn(
+                cfg, p, b, mesh=mesh, n_microbatches=M)[0])
+            np.testing.assert_allclose(float(pp(p_sh, batch)),
+                                       float(ref_loss), rtol=1e-5)
+        pp4 = jax.jit(lambda p, b: gpipe_loss_fn(
+            cfg, p, b, mesh=mesh, n_microbatches=4)[0])
+        g_ref = jax.grad(lambda p: loss_fn(cfg, p, batch)[0])(params)
+        g_pp = jax.jit(jax.grad(pp4))(p_sh, batch)
+        for a, b in zip(jax.tree.leaves(g_ref), jax.tree.leaves(g_pp)):
+            np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                       atol=2e-4, rtol=2e-3)
+        print("GPIPE-EXACT")
+    """, n_devices=4)
+    assert "GPIPE-EXACT" in out
+
+
+def test_pp_train_step_descends(devices8):
+    out = devices8("""
+        import dataclasses
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.config import MeshConfig, TrainConfig
+        from repro.configs.registry import get_smoke_config
+        from repro.distributed.mesh import local_mesh
+        from repro.distributed.pipeline import (make_pp_train_step,
+                                                pp_param_specs)
+        from repro.models.transformer import init_model
+        from repro.optim.adamw import AdamWState
+        from repro.train.train_step import TrainState, init_train_state
+
+        cfg = dataclasses.replace(get_smoke_config("codeqwen1.5-7b"),
+                                  dtype="float32", param_dtype="float32")
+        mesh = local_mesh((2, 2), ("pod", "data"))
+        mesh_cfg = MeshConfig((2, 2), ("pod", "data"))
+        tcfg = TrainConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+        params = init_model(cfg, jax.random.key(0))
+        state = init_train_state(cfg, tcfg, params)
+        p_specs = pp_param_specs(jax.eval_shape(lambda: params), cfg,
+                                 mesh_cfg)
+        p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs)
+        state_sh = TrainState(p_sh, AdamWState(
+            NamedSharding(mesh, P()), p_sh, p_sh), None)
+        state = jax.device_put(state, state_sh)
+        step = jax.jit(make_pp_train_step(cfg, tcfg, mesh=mesh,
+                                          n_microbatches=4))
+        rng = np.random.default_rng(1)
+        batch = {"tokens": jnp.asarray(
+                    rng.integers(0, cfg.vocab_size, (8, 32)), jnp.int32),
+                 "labels": jnp.asarray(
+                    rng.integers(0, cfg.vocab_size, (8, 32)), jnp.int32)}
+        losses = []
+        for _ in range(6):
+            state, m = step(state, batch)
+            losses.append(float(m["loss"]))
+        assert all(np.isfinite(losses))
+        assert losses[-1] < losses[0], losses
+        # stage sharding preserved through the update
+        blk = jax.tree.leaves(state.params["blocks"])[0]
+        assert "pod" in str(blk.sharding.spec)
+        print("PP-TRAIN-OK", losses[0], losses[-1])
+    """, n_devices=4)
+    assert "PP-TRAIN-OK" in out

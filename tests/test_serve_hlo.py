@@ -1,0 +1,113 @@
+"""Serving engine + HLO stats parser tests."""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_smoke_config
+from repro.launch.hlo_stats import collective_bytes
+from repro.models.transformer import forward, init_model
+from repro.serve.engine import ServeEngine, prefill_to_decode_cache
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "h2o-danube-1.8b",
+                                  "jamba-v0.1-52b", "whisper-tiny"])
+def test_serve_generate_matches_teacher_forcing(arch):
+    """Greedy generation must reproduce argmax of a teacher-forced full
+    forward over (prompt + generated) — validates the prefill→decode cache
+    handoff (incl. SWA ring and SSM state carry)."""
+    cfg = dataclasses.replace(get_smoke_config(arch), dtype="float32",
+                              param_dtype="float32")
+    params = init_model(cfg, jax.random.key(0))
+    rng = np.random.default_rng(1)
+    B, S_p, n_new = 2, 8, 6
+    prompts = rng.integers(0, cfg.vocab_size, (B, S_p)).astype(np.int32)
+    fe = None
+    if cfg.n_enc_layers:
+        fe = rng.normal(size=(B, S_p, cfg.d_model)).astype(np.float32)
+    eng = ServeEngine(cfg, params, max_len=S_p + n_new + 2)
+    out = eng.generate(prompts, n_new, frontend_embeds=fe, greedy=True)
+    assert out.shape == (B, n_new)
+
+    # teacher-forced check, token by token
+    seq = np.concatenate([prompts, out], axis=1)
+    batch = {"tokens": jnp.asarray(seq)}
+    if fe is not None:
+        batch["frontend_embeds"] = jnp.asarray(fe)
+    logits, _ = forward(cfg, params, batch)
+    logits = np.asarray(logits, np.float32)
+    for j in range(n_new):
+        pos = S_p + j - 1
+        want = logits[:, pos].argmax(-1)
+        np.testing.assert_array_equal(out[:, j], want)
+
+
+def test_vlm_generate_with_image_prefix():
+    cfg = dataclasses.replace(get_smoke_config("internvl2-26b"),
+                              dtype="float32", param_dtype="float32")
+    params = init_model(cfg, jax.random.key(0))
+    rng = np.random.default_rng(2)
+    B, S_p, S_img, n_new = 1, 6, 16, 4
+    prompts = rng.integers(0, cfg.vocab_size, (B, S_p)).astype(np.int32)
+    fe = rng.normal(size=(B, S_img, cfg.d_model)).astype(np.float32)
+    eng = ServeEngine(cfg, params, max_len=S_img + S_p + n_new + 2)
+    out = eng.generate(prompts, n_new, frontend_embeds=fe, greedy=True)
+    assert out.shape == (B, n_new)
+    seq = np.concatenate([prompts, out], axis=1)
+    logits, _ = forward(cfg, params, {"tokens": jnp.asarray(seq),
+                                      "frontend_embeds": jnp.asarray(fe)})
+    logits = np.asarray(logits, np.float32)
+    for j in range(n_new):
+        pos = S_img + S_p + j - 1
+        np.testing.assert_array_equal(out[:, j], logits[:, pos].argmax(-1))
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parser
+# ---------------------------------------------------------------------------
+
+SAMPLE = """
+HloModule jit_step
+%r = f32[32,4096]{1,0} all-reduce(%x), replica_groups=[16,16]<=[16,16]T(1,0)
+%fusion = f32[8]{0} fusion(%r, %all-reduce.2), kind=kLoop
+%ag = bf16[32,4096,3144]{2,1,0} all-gather(%y), replica_groups=[128,2]<=[16,16]T(1,0), dimensions={0}
+%rs = f32[16,128]{1,0} reduce-scatter(%z), replica_groups=[16,16]<=[256], dimensions={0}
+%cp = s32[16,4096,1]{2,1,0} collective-permute(%w), source_target_pairs={{0,0},{1,1}}
+%a2a = bf16[8,64]{1,0} all-to-all(%u), replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}
+%ags = (f32[128]{0}, f32[512]{0}) all-gather-start(%v), replica_groups=[4,4]<=[16]
+%agd = f32[512]{0} all-gather-done(%ags)
+"""
+
+
+def test_collective_bytes_wire_math():
+    got = collective_bytes(SAMPLE)
+    # all-reduce: 32*4096*4 B result, g=16 → 2*(15/16)*524288
+    np.testing.assert_allclose(got["all-reduce"],
+                               2 * 15 / 16 * 32 * 4096 * 4)
+    # all-gather: result 32*4096*3144*2, g=2 → (1/2)*result
+    np.testing.assert_allclose(got["all-gather"],
+                               0.5 * 32 * 4096 * 3144 * 2 + 3 / 4 * 512 * 4)
+    # reduce-scatter: result 16*128*4, g=16 → result*15
+    np.testing.assert_allclose(got["reduce-scatter"], 16 * 128 * 4 * 15)
+    # permute: raw result bytes
+    np.testing.assert_allclose(got["collective-permute"], 16 * 4096 * 4)
+    # all-to-all: g=8 → (7/8)*result
+    np.testing.assert_allclose(got["all-to-all"], 7 / 8 * 8 * 64 * 2)
+    assert got["n_all-gather"] == 2           # start counted, done skipped
+    assert got["n_all-reduce"] == 1           # fusion operand mention skipped
+    assert got["total"] == sum(got[k] for k in (
+        "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+        "collective-permute"))
+
+
+def test_extrapolation_affine():
+    from repro.launch.dryrun import _extrapolate
+    c11 = {"flops": 10.0}
+    c21 = {"flops": 16.0}     # dL = 6
+    c12 = {"flops": 17.0}     # dA = 7
+    out = _extrapolate(c11, c21, c12, NB=4, A=3, keys=("flops",))
+    # base=10, per-acc c=7 with 1 block; per-extra-block 6
+    # total = 10 + 2*7 + 3*3*6 = 78
+    np.testing.assert_allclose(out["flops"], 78.0)

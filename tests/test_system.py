@@ -1,0 +1,68 @@
+"""End-to-end system test: the paper's engine as the ingest stage of the
+LM stack — wordcount builds the vocabulary, the trainer overfits a tiny
+model on the re-encoded stream, the serve engine generates from it.
+
+Single-device (the multi-device variants live in test_engine/test_train);
+this test proves the layers compose.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.config import ShapeConfig, SINGLE_POD, TrainConfig
+from repro.configs.registry import get_smoke_config
+from repro.core.wordcount import WordCount, wordcount_oracle
+from repro.data.corpus import zipf_tokens
+from repro.launch.specs import make_run
+from repro.models.transformer import init_model
+from repro.serve.engine import ServeEngine
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def test_wordcount_to_training_to_serving():
+    # 1) ingest: wordcount over a Zipf stream (P=1 mesh — the engine runs
+    #    on any mesh size) builds the id->count table
+    raw = zipf_tokens(50_000, vocab=4_096, seed=0)
+    job = WordCount(backend="1s")
+    job.init(raw, vocab=4_096, task_size=2_048, push_cap=1_024, n_procs=1)
+    job.run()
+    counts = job.result_dict()
+    assert counts == wordcount_oracle(raw, 4_096)
+
+    # 2) vocab: keep the top-K words, re-encode the stream (rank ids —
+    #    exactly what a production ingest does with engine counts)
+    K = 256
+    top = sorted(counts, key=counts.get, reverse=True)[: K - 1]
+    rank_of = np.zeros(4_096, np.int32)          # 0 = <unk>
+    for r, w in enumerate(top):
+        rank_of[w] = r + 1
+    stream = rank_of[raw]
+    assert stream.max() < K
+
+    # 3) train a tiny LM on the re-encoded stream
+    cfg = dataclasses.replace(get_smoke_config("olmo-1b"),
+                              vocab_size=K, dtype="float32",
+                              param_dtype="float32")
+    run = make_run(cfg, ShapeConfig("t", 32, 4, "train"), SINGLE_POD)
+    run = dataclasses.replace(run, train=TrainConfig(
+        lr=3e-3, warmup_steps=2, total_steps=40))
+    params = init_model(cfg, jax.random.key(0))
+    state = init_train_state(cfg, run.train, params)
+    step = jax.jit(make_train_step(cfg, run))
+    grid = stream[: 4 * 33 * 20].reshape(20, 4, 33)
+    losses = []
+    for i in range(40):
+        g = grid[i % 20]
+        batch = {"tokens": jnp.asarray(g[:, :-1]),
+                 "labels": jnp.asarray(g[:, 1:])}
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0], (losses[0], losses[-1])
+
+    # 4) serve from the trained params
+    eng = ServeEngine(cfg, state.params, max_len=48)
+    out = eng.generate(np.asarray(grid[0][:, :16], np.int32), 8)
+    assert out.shape == (4, 8)
+    assert (out >= 0).all() and (out < K).all()

@@ -1,0 +1,153 @@
+"""Training substrate: grad-accum equivalence, loss descent, remat
+invariance, sharded FSDP train step.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.config import ShapeConfig, SINGLE_POD, TrainConfig
+from repro.configs.registry import get_smoke_config
+from repro.launch.specs import make_run
+from repro.models.transformer import init_model, loss_fn
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def _setup(arch="olmo-1b", B=4, S=32, **tkw):
+    cfg = dataclasses.replace(get_smoke_config(arch), dtype="float32",
+                              param_dtype="float32")
+    shape = ShapeConfig("t", S, B, "train")
+    run = make_run(cfg, shape, SINGLE_POD)
+    tcfg = TrainConfig(lr=1e-3, warmup_steps=2, total_steps=50, **tkw)
+    run = dataclasses.replace(run, train=tcfg)
+    params = init_model(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)),
+                              jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)),
+                              jnp.int32),
+    }
+    return cfg, run, params, batch
+
+
+def test_grad_accum_matches_single_batch():
+    """A=4 microbatched accumulation == A=1 full batch (same update)."""
+    cfg, run1, params, batch = _setup(B=8)
+    run4 = dataclasses.replace(run1, microbatch=2)
+    assert run4.grad_accum_steps == 4 and run1.grad_accum_steps == 1
+    s0 = init_train_state(cfg, run1.train, params)
+    st1, m1 = jax.jit(make_train_step(cfg, run1))(s0, batch)
+    st4, m4 = jax.jit(make_train_step(cfg, run4))(s0, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]),
+                               rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(st1.params), jax.tree.leaves(st4.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-4)
+
+
+def test_loss_decreases_overfit():
+    cfg, run, params, batch = _setup(B=4, S=32)
+    state = init_train_state(cfg, run.train, params)
+    step = jax.jit(make_train_step(cfg, run))
+    losses = []
+    for _ in range(30):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] * 0.7, losses[::6]
+    assert all(np.isfinite(losses))
+
+
+def test_remat_policies_same_loss_and_grads():
+    cfg, run, params, batch = _setup()
+    vals = {}
+    for pol in ("none", "dots", "full"):
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, remat=pol), has_aux=True)(params)
+        vals[pol] = (float(loss), grads)
+    for pol in ("dots", "full"):
+        np.testing.assert_allclose(vals[pol][0], vals["none"][0], rtol=1e-6)
+        for a, b in zip(jax.tree.leaves(vals[pol][1]),
+                        jax.tree.leaves(vals["none"][1])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5, rtol=1e-4)
+
+
+def test_compressed_grad_sync_error_feedback():
+    """int8 + error feedback: a constant gradient stream must converge to
+    the exact mean direction (residual absorbs quantization bias)."""
+    from repro.optim import compress as cp
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(
+        size=(64, 64)), jnp.float32)}
+    res = cp.init_residuals(g)
+    acc = jnp.zeros_like(g["w"])
+    N = 50
+    for _ in range(N):
+        gq, res = cp.ef_compress(g, res)
+        acc = acc + gq["w"]
+    np.testing.assert_allclose(np.asarray(acc / N), np.asarray(g["w"]),
+                               atol=2e-3)
+
+
+def test_unbalanced_batch_train_step_finite():
+    """Sequence-packed labels with mask (imbalanced tokens per row)."""
+    cfg, run, params, batch = _setup(B=4, S=32)
+    mask = np.ones((4, 32), np.float32)
+    mask[1, 8:] = 0.0
+    mask[3, 2:] = 0.0
+    batch["loss_mask"] = jnp.asarray(mask)
+    loss, m = loss_fn(cfg, params, batch)
+    assert np.isfinite(float(loss))
+
+
+def test_sharded_fsdp_train_step(devices8):
+    """2-step train on a (2,4) mesh with FSDP+TP sharding rules: runs,
+    finite, and parameters stay sharded per the specs."""
+    out = devices8("""
+        import dataclasses
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.config import ShapeConfig, MeshConfig, TrainConfig
+        from repro.configs.registry import get_smoke_config
+        from repro.distributed.mesh import local_mesh
+        from repro.distributed import sharding as shd
+        from repro.launch import specs as sp
+        from repro.models.transformer import init_model
+        from repro.train.train_step import init_train_state, make_train_step
+
+        cfg = dataclasses.replace(get_smoke_config("olmo-1b"),
+                                  dtype="float32", param_dtype="float32")
+        mesh_cfg = MeshConfig((2, 4), ("data", "model"))
+        mesh = local_mesh((2, 4), ("data", "model"))
+        shape = ShapeConfig("t", 32, 4, "train")
+        run = sp.make_run(cfg, shape, mesh_cfg)
+        run = dataclasses.replace(run, train=TrainConfig(lr=1e-3,
+                                  warmup_steps=2, total_steps=10))
+        params = init_model(cfg, jax.random.key(0))
+        state = init_train_state(cfg, run.train, params)
+        state_sh = sp.state_shardings(cfg, mesh, mesh_cfg,
+                                      jax.eval_shape(lambda: state))
+        state = jax.device_put(state, state_sh)
+        rng = np.random.default_rng(0)
+        batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                                    (4, 32)), jnp.int32),
+                 "labels": jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                                    (4, 32)), jnp.int32)}
+        batch_sh = sp.batch_shardings(cfg, shape, mesh, mesh_cfg,
+                                      jax.eval_shape(lambda: batch))
+        batch = jax.device_put(batch, batch_sh)
+        dp = sp.dp_entry_for(shape, mesh_cfg)
+        step = jax.jit(make_train_step(cfg, run, mesh=mesh, dp_entry=dp),
+                       in_shardings=(state_sh, batch_sh))
+        l0 = None
+        for i in range(3):
+            state, m = step(state, batch)
+            assert np.isfinite(float(m["loss"]))
+            l0 = l0 or float(m["loss"])
+        # sharding preserved on outputs
+        emb = state.params["embed_tokens"]
+        assert emb.sharding.spec == state_sh.params["embed_tokens"].spec
+        print("FSDP-STEP-OK", l0, float(m["loss"]))
+    """)
+    assert "FSDP-STEP-OK" in out
