@@ -73,7 +73,8 @@ from jax import lax
 from repro.core.kv import (bucketize, local_reduce, local_reduce_repeated,
                            mix32, KEY_SENTINEL)
 from repro.core.windows import DenseWindow
-from repro.core.wordcount import WordCount
+from repro.core.usecase import as_map_fn
+from repro.core.usecases import WordCount
 
 TASK = {task_size}
 P = {n_procs}
@@ -90,14 +91,14 @@ def timeit(fn, *args, n=20):
 
 rng = np.random.default_rng(0)
 toks = jnp.asarray(rng.integers(0, VOCAB, TASK), jnp.int32)
-wc = WordCount()
+map_fn = as_map_fn(WordCount(vocab=VOCAB))
 
 def make_task(r):
     # the full per-task sender work at repeat r: map + (repeated) local
     # reduce + bucketize — exactly the engines' phase I+II
     @jax.jit
     def f(t):
-        keys, vals = wc.map_task(t, jnp.int32(r))
+        keys, vals = map_fn(t, jnp.int32(0), jnp.int32(r))
         uk, uv = local_reduce_repeated(keys, vals, keys.shape[0],
                                        jnp.int32(r))
         return bucketize(uk, uv, P, CAP)
@@ -135,6 +136,7 @@ import json, time
 import numpy as np, jax, jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
+from repro.distributed.collectives import shard_map
 from repro.distributed.mesh import local_mesh
 
 n = {n_procs}
@@ -145,8 +147,8 @@ def measure(cap):
     def body(x):
         x = x[0]
         return lax.all_to_all(x, "procs", 0, 0, tiled=False)[None]
-    fn = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=(P("procs"),),
-                               out_specs=P("procs")))
+    fn = jax.jit(shard_map(body, mesh=mesh, in_specs=(P("procs"),),
+                           out_specs=P("procs")))
     x = jnp.ones((n, n, cap, 2), jnp.int32)
     jax.block_until_ready(fn(x))
     t0 = time.perf_counter()

@@ -26,7 +26,8 @@ HOT_FRACTION = 0.125
 REAL_CODE = """
 import json, time
 import numpy as np
-from repro.core.wordcount import WordCount
+from repro.core import JobConfig, submit
+from repro.core.usecases import WordCount
 from repro.data.corpus import imbalance_repeats, synth_corpus
 
 P = {n_procs}
@@ -40,13 +41,10 @@ reps = imbalance_repeats(P, T, mode={mode!r}, hot_factor=8,
                          hot_fraction=0.125)
 out = {{}}
 for backend in ("1s", "2s"):
-    job = WordCount(backend=backend)
-    job.init(tokens, vocab=VOCAB, task_size=task, push_cap=1024, n_procs=P,
-             repeats=reps)
-    job.run()                       # compile + correctness
-    t0 = time.perf_counter()
-    job.run()
-    out[backend] = time.perf_counter() - t0
+    cfg = JobConfig(usecase=WordCount(vocab=VOCAB), backend=backend,
+                    task_size=task, push_cap=1024, n_procs=P)
+    submit(cfg, tokens, repeats=reps).result()   # compile + correctness
+    out[backend] = submit(cfg, tokens, repeats=reps).result().wall_time
 print(json.dumps(out))
 """
 

@@ -3,10 +3,11 @@
 Paper: MPI storage windows + MPI_Win_sync after each Map task and after
 Reduce cost only ≈4.8% because transfers overlap compute.
 
-Here: the segmented MR-1S engine snapshots its window carry after every
-segment via CheckpointManager.save_async (the device_get runs in a worker
-thread, overlapping the next segment's compute — the same mechanism).
-We measure wall time with checkpoints off / async / sync(blocking).
+Here: a segmented MR-1S JobHandle snapshots its window carry after every
+``step()`` via ``handle.checkpoint(manager)`` (the device_get runs in a
+worker thread, overlapping the next segment's compute — the same
+mechanism). We measure wall time with checkpoints off / async /
+sync(blocking).
 """
 from __future__ import annotations
 
@@ -19,35 +20,33 @@ CODE = """
 import json, time, tempfile
 import numpy as np, jax
 from repro.ckpt.checkpoint import CheckpointManager
-from repro.core import onesided
-from repro.core.wordcount import WordCount
+from repro.core import JobConfig, submit
+from repro.core.usecases import WordCount
 from repro.data.corpus import synth_corpus
 
 P, task, VOCAB = 8, 4096, 65536
 N = {n_tokens}
 tokens = synth_corpus(N, VOCAB, seed=0)
-job = WordCount(backend="1s")
-job.init(tokens, vocab=VOCAB, task_size=task, push_cap=1024, n_procs=P)
-init_fn, seg_fn, fin_fn = onesided.make_segment_fns(
-    job.spec, job.map_task, job.mesh)
-T = job._tokens.shape[1]
-SEG = 2
+cfg = JobConfig(usecase=WordCount(vocab=VOCAB), backend="1s",
+                task_size=task, push_cap=1024, n_procs=P, segment=2)
 
 def run(mode):
     mgr = CheckpointManager(tempfile.mkdtemp(), keep=2) \\
         if mode != "off" else None
-    carry = init_fn()
-    jax.block_until_ready(carry)
+    handle = submit(cfg, tokens)
+    handle._ensure_segmented()
+    jax.block_until_ready(handle.carry)
     t0 = time.perf_counter()
-    for s in range(0, T, SEG):
-        carry = seg_fn(carry, job._tokens[:, s:s+SEG],
-                       job._repeats[:, s:s+SEG])
+    while True:
+        more = handle.step()
         if mode == "async":
-            mgr.save_async(s, carry, extra={{"next": s + SEG}})
+            handle.checkpoint(mgr)
         elif mode == "sync":
-            mgr.save(s, carry, extra={{"next": s + SEG}})
-    out = fin_fn(carry)
-    jax.block_until_ready(out)
+            mgr.save(handle.cursor, handle.carry,
+                     extra={{"cursor": handle.cursor}})
+        if not more:
+            break
+    out = handle.result()
     if mgr:
         mgr.wait()
     return time.perf_counter() - t0

@@ -41,9 +41,11 @@ import json
 from functools import partial
 import numpy as np, jax
 from jax.sharding import PartitionSpec as P
+from repro.core import JobConfig, submit
 from repro.core import onesided, twosided
-from repro.core.wordcount import WordCount
+from repro.core.usecases import WordCount
 from repro.data.corpus import synth_corpus
+from repro.distributed.collectives import shard_map
 
 NP, task, VOCAB, CAP = 8, 4096, 65536, 1024
 N = {n_tokens}
@@ -51,16 +53,20 @@ tokens = synth_corpus(N, VOCAB, seed=0)
 
 out = {{}}
 for backend, mod in (("1s", onesided), ("2s", twosided)):
-    job = WordCount(backend=backend)
-    job.init(tokens, vocab=VOCAB, task_size=task, push_cap=CAP, n_procs=NP)
-    fn = jax.jit(jax.shard_map(
-        partial(mod._engine, job.spec, job.map_task), mesh=job.mesh,
-        in_specs=(P("procs"), P("procs")), out_specs=(P("procs"),
-                                                      P("procs"))))
-    compiled = fn.lower(job._tokens, job._repeats).compile()
+    h = submit(JobConfig(usecase=WordCount(vocab=VOCAB), backend=backend,
+                         task_size=task, push_cap=CAP, n_procs=NP), tokens)
+    fn = jax.jit(shard_map(
+        partial(mod._engine, h.spec, h._map_fn), mesh=h.mesh,
+        in_specs=(P("procs"), P("procs"), P("procs")),
+        out_specs=(P("procs"), P("procs"))))
+    compiled = fn.lower(h._tokens, h._task_ids, h._repeats).compile()
     ma = compiled.memory_analysis()
+    peak = getattr(ma, "peak_memory_in_bytes", None)
+    if peak is None:      # jax 0.4.x: approximate peak from components
+        peak = (ma.temp_size_in_bytes + ma.argument_size_in_bytes +
+                ma.output_size_in_bytes)
     out[backend] = dict(
-        peak=float(ma.peak_memory_in_bytes),
+        peak=float(peak),
         temp=float(ma.temp_size_in_bytes),
         args=float(ma.argument_size_in_bytes))
 out["ratio_peak_2s_over_1s"] = out["2s"]["peak"] / out["1s"]["peak"]

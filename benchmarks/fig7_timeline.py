@@ -42,34 +42,33 @@ def ascii_timeline(timeline: List, P: int, width: int = 72) -> str:
 FORCED_SYNC_CODE = """
 import json, time
 import numpy as np, jax
-from repro.core import onesided
-from repro.core.wordcount import WordCount
+from repro.core import JobConfig, submit
+from repro.core.usecases import WordCount
 from repro.data.corpus import imbalance_repeats, synth_corpus
 
 P, task, VOCAB = 8, 4096, 65536
 tokens = synth_corpus({n_tokens}, VOCAB, seed=0)
-job = WordCount(backend="1s")
-job.init(tokens, vocab=VOCAB, task_size=task, push_cap=1024, n_procs=P)
-T = job._tokens.shape[1]
+cfg = JobConfig(usecase=WordCount(vocab=VOCAB), backend="1s",
+                task_size=task, push_cap=1024, n_procs=P, segment=1)
+T = (len(tokens) + task * P - 1) // (task * P)
 reps = imbalance_repeats(P, T, mode="unbalanced", hot_factor=8,
                          hot_fraction=0.125)
-job._repeats = reps
-init_fn, seg_fn, fin_fn = onesided.make_segment_fns(
-    job.spec, job.map_task, job.mesh)
 
 def run(force_sync):
-    carry = init_fn()
-    jax.block_until_ready(carry)
+    handle = submit(cfg, tokens, repeats=reps)
+    handle._ensure_segmented()
+    jax.block_until_ready(handle.carry)
     t0 = time.perf_counter()
     seg_times = []
-    for s in range(T):
-        carry = seg_fn(carry, job._tokens[:, s:s+1], job._repeats[:, s:s+1])
+    while True:
+        more = handle.step()
         if force_sync:
             t_s = time.perf_counter()
-            jax.block_until_ready(carry)        # the "redundant lock/unlock"
+            jax.block_until_ready(handle.carry) # the "redundant lock/unlock"
             seg_times.append(time.perf_counter() - t_s)
-    out = fin_fn(carry)
-    jax.block_until_ready(out)
+        if not more:
+            break
+    handle.result()
     return time.perf_counter() - t0, seg_times
 
 run(False)

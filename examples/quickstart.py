@@ -1,4 +1,4 @@
-"""Quickstart — the paper's Listing 1 on the JAX engine, in 20 lines.
+"""Quickstart — the paper's Listing 1 on the unified Job API, in 20 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -6,32 +6,30 @@ import os
 os.environ.setdefault("XLA_FLAGS",
                       "--xla_force_host_platform_device_count=8")
 
-import numpy as np
-
-from repro.core.wordcount import WordCount
+from repro.core import JobConfig, submit
+from repro.core.usecases import WordCount
 from repro.data.corpus import synth_corpus
 
 
 def main():
     tokens = synth_corpus(500_000, vocab=65_536, seed=0)
 
-    # paper Listing 1: create job with the MR-1S back-end, Init, Run, Print
-    job = WordCount(backend="1s")
-    job.init(tokens, vocab=65_536, task_size=4_096, push_cap=1_024,
-             n_procs=8)
-    keys, vals = job.run()
+    # paper Listing 1, redesigned: declare the use-case + backend, submit
+    cfg = JobConfig(usecase=WordCount(vocab=65_536), backend="1s",
+                    task_size=4_096, push_cap=1_024, n_procs=8)
+    result = submit(cfg, tokens).result()
     print("top-10 words (id\tcount):")
-    job.print_result(top=10)
-    job.finalize()
+    for k, v in sorted(result.records.items(), key=lambda kv: -kv[1])[:10]:
+        print(f"{k}\t{v}")
+    print(f"\n{result.n_tasks} tasks over {len(result.tasks_per_rank)} "
+          f"ranks in {result.wall_time:.2f}s "
+          f"(imbalance {result.imbalance:.2f})")
 
     # the bulk-synchronous reference (Hoefler et al.) gives the same answer
-    ref = WordCount(backend="2s")
-    ref.init(tokens, vocab=65_536, task_size=4_096, push_cap=1_024,
-             n_procs=8)
-    ref.run()
-    assert job.result_dict() == ref.result_dict()
-    print("\nMR-1S == MR-2S result: OK "
-          f"({len(ref.result_dict())} unique words)")
+    import dataclasses
+    ref = submit(dataclasses.replace(cfg, backend="2s"), tokens).result()
+    assert ref.records == result.records
+    print(f"MR-1S == MR-2S result: OK ({len(ref.records)} unique words)")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,6 @@
 """PUMA-style Word-Count under imbalance — the paper's §3 experiment at
-container scale, plus the engine-built vocabulary feeding the tokenizer
-(the framework's ingest path).
+container scale on the unified Job API, plus the engine-built vocabulary
+feeding the tokenizer (the framework's ingest path).
 
     PYTHONPATH=src python examples/wordcount_puma.py
 """
@@ -8,24 +8,17 @@ import os
 os.environ.setdefault("XLA_FLAGS",
                       "--xla_force_host_platform_device_count=8")
 
-import time
-
-import numpy as np
-
-from repro.core.wordcount import WordCount
+from repro.core import JobConfig, submit
+from repro.core.usecases import WordCount
 from repro.data.corpus import imbalance_repeats, synth_corpus
 from repro.data.tokenizer import Vocab
 
 
 def run_engine(tokens, backend, repeats, P=8):
-    job = WordCount(backend=backend)
-    job.init(tokens, vocab=65_536, task_size=4_096, push_cap=1_024,
-             n_procs=P, repeats=repeats)
-    job.run()                                   # compile + warm
-    t0 = time.perf_counter()
-    job.run()
-    wall = time.perf_counter() - t0
-    return job, wall
+    cfg = JobConfig(usecase=WordCount(vocab=65_536), backend=backend,
+                    task_size=4_096, push_cap=1_024, n_procs=P)
+    submit(cfg, tokens, repeats=repeats).result()     # compile + warm
+    return submit(cfg, tokens, repeats=repeats).result()
 
 
 def main():
@@ -35,22 +28,23 @@ def main():
 
     print("=== balanced workload (paper Fig 4a/4b regime) ===")
     bal = imbalance_repeats(P, T, mode="balanced")
-    job2, t2 = run_engine(tokens, "2s", bal)
-    job1, t1 = run_engine(tokens, "1s", bal)
-    print(f"MR-2S {t2:.2f}s | MR-1S {t1:.2f}s "
-          f"({100 * (1 - t1 / t2):+.1f}%)")
+    res2 = run_engine(tokens, "2s", bal)
+    res1 = run_engine(tokens, "1s", bal)
+    print(f"MR-2S {res2.wall_time:.2f}s | MR-1S {res1.wall_time:.2f}s "
+          f"({100 * (1 - res1.wall_time / res2.wall_time):+.1f}%)")
 
     print("\n=== unbalanced workload (hot ranks compute 8x — Fig 4c/4d) ===")
     unb = imbalance_repeats(P, T, mode="unbalanced", hot_factor=8,
                             hot_fraction=0.125)
-    job2u, t2u = run_engine(tokens, "2s", unb)
-    job1u, t1u = run_engine(tokens, "1s", unb)
-    print(f"MR-2S {t2u:.2f}s | MR-1S {t1u:.2f}s "
-          f"({100 * (1 - t1u / t2u):+.1f}%)")
-    assert job1u.result_dict() == job2u.result_dict() == job1.result_dict()
+    res2u = run_engine(tokens, "2s", unb)
+    res1u = run_engine(tokens, "1s", unb)
+    print(f"MR-2S {res2u.wall_time:.2f}s | MR-1S {res1u.wall_time:.2f}s "
+          f"({100 * (1 - res1u.wall_time / res2u.wall_time):+.1f}%) "
+          f"[imbalance {res1u.imbalance:.2f}]")
+    assert res1u.records == res2u.records == res1.records
 
     # ingest path: the engine's counts build the LM tokenizer vocabulary
-    counts = job1.result_dict()
+    counts = res1.records
     top = {f"word{k}".encode(): v for k, v in counts.items()}
     vocab = Vocab.from_counts(top, max_size=4_096)
     print(f"\nengine-built Vocab: size {vocab.size} "

@@ -11,8 +11,12 @@ next steps — transfer and compute overlap exactly as with storage windows.
 Manifest commit is an atomic rename, so a crash mid-write never corrupts the
 restore point. ``keep`` bounds disk usage; restore returns (step, tree).
 
-Works for both the MapReduce engine's window carries (fig5 benchmark) and
-the trainer's param/opt state (launch/train.py).
+Works for both the MapReduce engine's window carries and the trainer's
+param/opt state (launch/train.py). For engine jobs, the unified Job API
+is the front door: a segmented ``JobHandle`` calls
+``handle.checkpoint(manager)`` after each ``step()`` (async snapshot of
+the backend-agnostic EngineCarry) and ``handle.restore(manager)``
+resumes — see tests/test_ckpt_ft.py and benchmarks/fig5_ckpt.py.
 """
 from __future__ import annotations
 

@@ -1,4 +1,14 @@
 # The paper's primary contribution: the decoupled (one-sided) MapReduce
-# engine and its bulk-synchronous reference, as composable JAX modules.
-from repro.core.api import JobSpec, MapReduceJob
-from repro.core.wordcount import WordCount, wordcount_oracle
+# engine and its bulk-synchronous reference, behind the unified Job API —
+# pluggable backends (registry), declarative use-cases, and a streaming
+# JobHandle lifecycle.
+from repro.core.job import JobConfig, JobHandle, JobResult, submit
+from repro.core.registry import (Backend, JobSpec, UnknownBackendError,
+                                 available_backends, get_backend,
+                                 register_backend)
+from repro.core.usecase import UseCase, as_map_fn
+from repro.core.usecases import (Histogram, InvertedIndex, WordCount,
+                                 histogram_oracle, inverted_index_oracle,
+                                 wordcount_oracle)
+# deprecated class-based API (one-release migration shim)
+from repro.core.api import MapReduceJob

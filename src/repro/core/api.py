@@ -1,61 +1,60 @@
-"""Public MapReduce API — mirrors the paper's class hierarchy (Listing 1).
+"""Deprecated class-based API — kept one release for migration.
 
-  * Base class  -> :class:`MapReduceJob` (Init / Run / Print / Finalize)
-  * Back-end    -> ``backend="1s" | "2s"`` (core.onesided / core.twosided)
-  * Use-case    -> subclass providing ``map_task`` (+ optional
-                   ``reduce_local`` — the default fuses it into Map, as the
-                   paper does)
+The public API now lives in :mod:`repro.core.job` (``submit`` /
+``JobHandle`` / ``JobResult``), :mod:`repro.core.registry` (pluggable
+backends) and :mod:`repro.core.usecase` (declarative scenarios)::
 
-Example (paper Listing 1 analogue)::
+    from repro.core import JobConfig, submit, WordCount
+    result = submit(JobConfig(usecase=WordCount(vocab=VOCAB),
+                              backend="1s", task_size=4096,
+                              push_cap=1024, n_procs=8), tokens).result()
+    result.records            # {key: count}
+    result.imbalance          # per-rank work stats
 
-    job = WordCount(backend="1s")
-    job.init(tokens, vocab=VOCAB, task_size=4096, push_cap=512, n_procs=8)
-    result = job.run()
-    job.print_result()
-    job.finalize()
+Migration from this module's ``MapReduceJob``:
+
+  =============================    ====================================
+  old (Listing-1 style)            new (unified Job API)
+  =============================    ====================================
+  subclass + ``map_task``          ``UseCase.map_emit`` (declarative)
+  ``job.init(tokens, ...)``        ``submit(JobConfig(...), tokens)``
+  ``job.run()``                    ``handle.result()`` (structured)
+  ``job.result_dict()``            ``result.records``
+  ``onesided.make_segment_fns``    ``JobConfig(segment=N)`` +
+                                   ``handle.step()/checkpoint()``
+  ``backend="1s"|"2s"`` strings    any ``register_backend`` name
+  =============================    ====================================
+
+``MapReduceJob`` below is a thin shim over the new machinery: old
+subclasses that override ``map_task(tokens, repeat)`` keep working, but
+emit a ``DeprecationWarning``.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass
-from typing import Callable, Optional
+import warnings
+from typing import Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import planner
 from repro.core.kv import KEY_SENTINEL
-
-
-@dataclass(frozen=True)
-class JobSpec:
-    """Static engine settings (paper: Init(filename, win_size, chunk_size,
-    task_size, ...))."""
-    vocab: int                   # dense Key-Value window size ("win_size")
-    task_size: int               # elements per Map task
-    push_cap: int                # records per one-sided push per owner
-                                 #   ("maximum bytes per one-sided operation")
-    n_procs: int
-    combine_capacity: int = 0    # 0 -> vocab
-    segment: int = 0             # checkpoint segment (tasks between syncs)
-
-    def __post_init__(self):
-        if not self.combine_capacity:
-            object.__setattr__(self, "combine_capacity", self.vocab)
+from repro.core.registry import JobSpec, get_backend  # re-export JobSpec
 
 
 class MapReduceJob:
-    """Base class: wiring between use-case, back-end and the mesh."""
+    """Deprecated: wiring between use-case, back-end and the mesh."""
 
     def __init__(self, backend: str = "1s"):
-        assert backend in ("1s", "2s"), backend
+        warnings.warn(
+            "MapReduceJob is deprecated; use repro.core.submit(JobConfig"
+            "(usecase=..., backend=...), dataset) instead",
+            DeprecationWarning, stacklevel=2)
         self.backend = backend
         self._compiled = None
         self.spec: Optional[JobSpec] = None
 
     # -- use-case hooks -----------------------------------------------------
-    def map_task(self, task_tokens: jnp.ndarray, repeat: jnp.ndarray):
+    def map_task(self, task_tokens, repeat):
         """-> (keys, values) fixed-length arrays. Override per use case."""
         raise NotImplementedError
 
@@ -72,17 +71,22 @@ class MapReduceJob:
         self.plan = planner.plan_input(len(tokens), task_size, n_procs)
         self._tokens = planner.shard_tasks(np.asarray(tokens, np.int32),
                                            self.plan)
+        self._task_ids = planner.shard_task_ids(self.plan)
         T = self.plan.tasks_per_proc
         if repeats is None:
             repeats = np.ones((n_procs, T), np.int32)
         self._repeats = np.asarray(repeats, np.int32).reshape(n_procs, T)
         return self
 
+    def _map_fn(self, task_tokens, task_id, repeat):
+        """Adapt the legacy map_task to the Backend protocol signature."""
+        return self.map_task(task_tokens, repeat)
+
     def run(self):
-        from repro.core import onesided, twosided
-        runner = onesided.run_job if self.backend == "1s" else twosided.run_job
-        keys, vals = runner(self.spec, self.map_task, self.mesh,
-                            self._tokens, self._repeats)
+        runner = get_backend(self.backend)
+        keys, vals = runner.run_job(self.spec, self._map_fn, self.mesh,
+                                    self._tokens, self._task_ids,
+                                    self._repeats)
         self._result = (np.asarray(keys), np.asarray(vals))
         return self._result
 

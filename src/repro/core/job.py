@@ -1,0 +1,261 @@
+"""The unified job lifecycle: ``submit(config, dataset) -> JobHandle``.
+
+This is the public entry point of the framework. A job is the triple
+(use-case, backend, dataset); the handle exposes the paper's decoupled
+lifecycle instead of one opaque blocking call:
+
+    cfg = JobConfig(usecase=WordCount(vocab=65_536), backend="1s",
+                    task_size=4_096, push_cap=1_024, n_procs=8)
+    result = submit(cfg, tokens).result()          # oneshot
+
+    cfg = dataclasses.replace(cfg, segment=2)      # streaming / ckpt mode
+    handle = submit(cfg, tokens)
+    while handle.step():                           # one segment at a time
+        handle.checkpoint(manager)                 # async window snapshot
+    result = handle.result()
+
+``JobResult`` is structured: the records dict, the use-case's finalized
+output, wall time, and per-rank task/work counts (the imbalance stats the
+paper's Fig 4 is about) — not raw key/value arrays.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.core import planner
+from repro.core.kv import KEY_SENTINEL
+from repro.core.registry import Backend, JobSpec, get_backend
+from repro.core.usecase import UseCase, as_map_fn, finalize
+
+
+@dataclass(frozen=True)
+class JobConfig:
+    """Declarative job description (replaces ``MapReduceJob.init(...)``)."""
+    usecase: UseCase
+    backend: str = "1s"
+    task_size: int = 4096
+    push_cap: int = 1024
+    n_procs: int = 8
+    segment: int = 0          # 0 -> oneshot; >0 -> tasks per step()
+    window: int = 0           # 0 -> usecase.window
+    combine_capacity: int = 0
+
+
+@dataclass(frozen=True)
+class JobResult:
+    """Structured outcome of a job."""
+    records: Dict[int, int]   # engine output: {key: reduced value}
+    output: Any               # usecase.finalize(records)
+    keys: np.ndarray          # rank-0 sorted keys (sentinel padded)
+    values: np.ndarray
+    wall_time: float          # seconds spent executing (incl. compile)
+    backend: str
+    n_tasks: int
+    tasks_per_rank: np.ndarray   # real (non-padding) tasks per rank
+    work_per_rank: np.ndarray    # sum of compute-repeats per rank
+
+    @property
+    def imbalance(self) -> float:
+        """max/mean of per-rank work — 1.0 means perfectly balanced."""
+        mean = self.work_per_rank.mean()
+        return float(self.work_per_rank.max() / mean) if mean else 1.0
+
+
+def submit(config: JobConfig, dataset, *, mesh=None,
+           repeats=None) -> "JobHandle":
+    """Plan ``dataset`` (a 1-D int32 token array) onto the mesh and return
+    a handle. Nothing executes until ``step()`` or ``result()``.
+
+    ``repeats`` is the optional (n_procs, tasks_per_proc) compute-repeat
+    grid — the paper's footnote-5 imbalance model."""
+    backend = get_backend(config.backend)        # fail fast on bad names
+    window = config.window or config.usecase.window
+    spec = JobSpec(vocab=window, task_size=config.task_size,
+                   push_cap=config.push_cap, n_procs=config.n_procs,
+                   combine_capacity=config.combine_capacity,
+                   segment=config.segment)
+    from repro.distributed.mesh import local_mesh
+    if mesh is None:
+        mesh = local_mesh((config.n_procs,), ("procs",))
+    plan = planner.plan_input(len(dataset), config.task_size,
+                              config.n_procs)
+    tokens = planner.shard_tasks(np.asarray(dataset, np.int32), plan)
+    task_ids = planner.shard_task_ids(plan)
+    T = plan.tasks_per_proc
+    if repeats is None:
+        repeats = np.ones((config.n_procs, T), np.int32)
+    repeats = np.asarray(repeats, np.int32).reshape(config.n_procs, T)
+    return JobHandle(config, backend, spec, mesh, plan, tokens, task_ids,
+                     repeats)
+
+
+class JobHandle:
+    """Streaming lifecycle of one submitted job.
+
+    * oneshot (``segment == 0``): ``result()`` runs the backend's blocking
+      ``run_job`` once and caches the outcome;
+    * segmented (``segment > 0``): ``step()`` advances one segment through
+      the backend's ``make_segment_fns`` triple; ``checkpoint(manager)``
+      snapshots the window carry asynchronously; ``restore(manager)``
+      resumes from the latest (or a given) snapshot; ``result()`` finishes
+      the remaining segments and the Combine phase.
+    """
+
+    def __init__(self, config, backend: Backend, spec, mesh, plan,
+                 tokens, task_ids, repeats):
+        self.config = config
+        self.backend = backend
+        self.spec = spec
+        self.mesh = mesh
+        self.plan = plan
+        self._tokens = tokens          # (P, T, S)
+        self._task_ids = task_ids      # (P, T)
+        self._repeats = repeats        # (P, T)
+        self._map_fn = as_map_fn(config.usecase)
+        self._seg_fns = None
+        self._carry = None
+        self._cursor = 0               # per-rank task slots completed
+        self._wall = 0.0
+        self._result: Optional[JobResult] = None
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def cursor(self) -> int:
+        """Per-rank task slots completed so far (segmented mode)."""
+        return self._cursor
+
+    @property
+    def done(self) -> bool:
+        return self._result is not None
+
+    @property
+    def carry(self):
+        """The current EngineCarry snapshot reference (segmented mode)."""
+        return self._carry
+
+    def windows(self) -> np.ndarray:
+        """Per-rank dense Key-Value windows, host-side (P, window) — the
+        state ``repro.ft.elastic.fold_windows`` redistributes. The 1s
+        backend's in-flight ``pending_*`` chunk is folded in so the
+        snapshot covers every record of every completed task (exactness
+        of a mid-job redistribution depends on it)."""
+        assert self._carry is not None, "no carry yet — call step() first"
+        tables = np.array(self._carry.table)                 # copy
+        P = tables.shape[0]
+        pk = np.asarray(self._carry.pending_k).reshape(P, -1)
+        pv = np.asarray(self._carry.pending_v).reshape(P, -1)
+        for r in range(P):
+            valid = pk[r] != int(KEY_SENTINEL)
+            np.add.at(tables[r], pk[r][valid], pv[r][valid])
+        return tables
+
+    def remaining_task_ids(self) -> np.ndarray:
+        """Global ids of tasks not yet executed (segmented mode) — what a
+        straggler-aware re-plan redistributes."""
+        ids = self._task_ids[:, self._cursor:]
+        return np.sort(ids[ids >= 0])
+
+    # -- segmented execution ------------------------------------------------
+
+    def _ensure_segmented(self):
+        if self.config.segment <= 0:
+            raise RuntimeError(
+                "step()/checkpoint() need a segmented job — set "
+                "JobConfig(segment=N) with N tasks per step")
+        if self._seg_fns is None:
+            self._seg_fns = self.backend.make_segment_fns(
+                self.spec, self._map_fn, self.mesh)
+            self._carry = self._seg_fns[0]()
+
+    def step(self, n_segments: int = 1) -> bool:
+        """Advance up to ``n_segments`` segments. Returns True while map
+        work remains (so ``while handle.step(): ...`` drains the job)."""
+        if self._result is not None:
+            return False
+        self._ensure_segmented()
+        _, seg_fn, _ = self._seg_fns
+        T, seg = self.plan.tasks_per_proc, self.config.segment
+        t0 = time.perf_counter()
+        for _ in range(n_segments):
+            if self._cursor >= T:
+                break
+            s, e = self._cursor, min(self._cursor + seg, T)
+            self._carry = seg_fn(self._carry, self._tokens[:, s:e],
+                                 self._task_ids[:, s:e],
+                                 self._repeats[:, s:e])
+            self._cursor = e
+        self._wall += time.perf_counter() - t0
+        return self._cursor < T
+
+    def checkpoint(self, manager, **extra):
+        """Asynchronously snapshot the window carry into ``manager`` (a
+        ``repro.ckpt.CheckpointManager``). The device_get happens in the
+        manager's worker thread, overlapping the next segment's compute —
+        the paper's MPI-storage-windows trick."""
+        self._ensure_segmented()
+        assert self._carry is not None
+        # reserved keys win over caller extras: restore() trusts "cursor"
+        return manager.save_async(self._cursor, self._carry,
+                                  extra={**extra,
+                                         "cursor": self._cursor,
+                                         "backend": self.backend.name})
+
+    def restore(self, manager, step: Optional[int] = None) -> "JobHandle":
+        """Resume from a snapshot taken by :meth:`checkpoint` (possibly in
+        a previous process)."""
+        import jax
+        self._ensure_segmented()
+        _, carry, extra = manager.restore(
+            jax.eval_shape(lambda: self._carry), step=step)
+        self._carry = carry
+        self._cursor = int(extra["cursor"])
+        return self
+
+    def load(self, carry, cursor: int) -> "JobHandle":
+        """Install an in-memory carry snapshot (elastic/straggler paths)."""
+        self._ensure_segmented()
+        self._carry = carry
+        self._cursor = int(cursor)
+        return self
+
+    # -- completion ---------------------------------------------------------
+
+    def result(self) -> JobResult:
+        """Run to completion (whatever mode) and return the JobResult."""
+        if self._result is not None:
+            return self._result
+        if self.config.segment > 0 or self._carry is not None:
+            while self.step():
+                pass
+            _, _, fin_fn = self._seg_fns
+            t0 = time.perf_counter()
+            keys, vals = fin_fn(self._carry)
+            keys = np.asarray(keys)[0]
+            vals = np.asarray(vals)[0]
+            self._wall += time.perf_counter() - t0
+        else:
+            t0 = time.perf_counter()
+            keys, vals = self.backend.run_job(
+                self.spec, self._map_fn, self.mesh, self._tokens,
+                self._task_ids, self._repeats)
+            self._wall += time.perf_counter() - t0
+            keys, vals = np.asarray(keys), np.asarray(vals)
+        valid = keys != int(KEY_SENTINEL)
+        records = dict(zip(keys[valid].tolist(), vals[valid].tolist()))
+        task_valid = self._task_ids >= 0
+        self._result = JobResult(
+            records=records,
+            output=finalize(self.config.usecase, records),
+            keys=keys, values=vals,
+            wall_time=self._wall,
+            backend=self.backend.name,
+            n_tasks=self.plan.n_tasks,
+            tasks_per_rank=task_valid.sum(axis=1),
+            work_per_rank=(self._repeats * task_valid).sum(axis=1),
+        )
+        return self._result

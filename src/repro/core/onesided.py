@@ -16,55 +16,35 @@ Structure (paper §2.1, Fig 1) and its JAX mapping:
                        dup-sum makes the result exact
   Combine              ⌈log2 P⌉-level merge tree (core/combine.py)
 
-The same body also runs segmented (``run_segments``) so the checkpoint layer
-can snapshot the windows after every segment — the paper's "window sync after
-each Map task" storage-window checkpoints.
+Registered as backend ``"1s"`` (:mod:`repro.core.registry`). Both the
+blocking ``run_job`` and the segmented ``make_segment_fns`` paths are
+methods of :class:`OneSidedBackend`, sharing the per-step body — the
+segmented path is what the checkpoint layer snapshots between calls (the
+paper's "window sync after each Map task" storage-window checkpoints).
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Callable, NamedTuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.api import JobSpec
 from repro.core.combine import tree_combine
-from repro.core.kv import (KEY_SENTINEL, bucketize, local_reduce,
-                           local_reduce_repeated)
-from repro.core.windows import (DenseWindow, STATUS_COMBINE, STATUS_MAP,
-                                STATUS_REDUCE)
-from repro.distributed.collectives import all_to_all_blocks
-
-AXIS = "procs"
-
-
-class EngineCarry(NamedTuple):
-    table: jnp.ndarray       # dense Key-Value window (vocab,)
-    pending_k: jnp.ndarray   # in-flight received chunk (P, cap)
-    pending_v: jnp.ndarray
-    status: jnp.ndarray      # scalar per process (STATUS_*)
-    cursor: jnp.ndarray      # tasks completed (restart point)
-
-
-def _init_carry(spec: JobSpec) -> EngineCarry:
-    from repro.distributed.collectives import pvary
-    P, cap = spec.n_procs, spec.push_cap
-    return pvary(EngineCarry(
-        table=jnp.zeros((spec.vocab,), jnp.int32),
-        pending_k=jnp.full((P, cap), KEY_SENTINEL, jnp.int32),
-        pending_v=jnp.zeros((P, cap), jnp.int32),
-        status=jnp.int32(STATUS_MAP),
-        cursor=jnp.int32(0),
-    ), AXIS)
+from repro.core.kv import KEY_SENTINEL, bucketize, local_reduce_repeated
+from repro.core.registry import JobSpec, memoized, register_backend
+from repro.core.windows import (AXIS, DenseWindow, EngineCarry,
+                                STATUS_REDUCE, combine_records, init_carry,
+                                wrap_segment_fns)
+from repro.distributed.collectives import all_to_all_blocks, shard_map
 
 
 def _step(spec: JobSpec, map_fn: Callable, carry: EngineCarry, xs):
-    task, rep = xs
+    task, task_id, rep = xs
     P, cap = spec.n_procs, spec.push_cap
     # Phase I: Map (+ simulated imbalance via data-dependent repeat loop)
-    keys, vals = map_fn(task, rep)
+    keys, vals = map_fn(task, task_id, rep)
     # Phase II: Local Reduce (inside Map, as in the paper). The repeat
     # factor re-computes the whole task (paper footnote 5) — per-rank
     # while-trip-counts differ, which is exactly the imbalance mechanism.
@@ -76,7 +56,7 @@ def _step(spec: JobSpec, map_fn: Callable, carry: EngineCarry, xs):
     # Phase III (incremental Reduce): fold the *previous* step's chunk while
     # this step's push is still in flight (double buffer).
     win = DenseWindow(carry.table).put(carry.pending_k.reshape(-1),
-                                       carry.pending_v.reshape(-1))
+                                      carry.pending_v.reshape(-1))
     # ownership transfer for overflowed records: keep them locally
     win = win.put(ofk, ofv)
     return EngineCarry(win.table, rk, rv, carry.status,
@@ -86,7 +66,7 @@ def _step(spec: JobSpec, map_fn: Callable, carry: EngineCarry, xs):
 def _drain(carry: EngineCarry) -> EngineCarry:
     """Fold the last in-flight chunk; enter STATUS_REDUCE -> done."""
     win = DenseWindow(carry.table).put(carry.pending_k.reshape(-1),
-                                       carry.pending_v.reshape(-1))
+                                      carry.pending_v.reshape(-1))
     P, cap = carry.pending_k.shape
     return EngineCarry(
         win.table,
@@ -102,71 +82,72 @@ def _shard_spec():
     return P(AXIS)
 
 
-def _engine(spec: JobSpec, map_fn: Callable, tokens, repeats):
-    """Per-shard engine body. tokens: (1, T, S); repeats: (1, T)."""
-    tokens = tokens[0]
-    repeats = repeats[0]
-    carry = _init_carry(spec)
+def _engine(spec: JobSpec, map_fn: Callable, tokens, task_ids, repeats):
+    """Per-shard engine body. tokens: (1, T, S); task_ids/repeats: (1, T)."""
+    tokens, task_ids, repeats = tokens[0], task_ids[0], repeats[0]
+    carry = init_carry(spec)
     carry, _ = lax.scan(partial(_step, spec, map_fn), carry,
-                        (tokens, repeats))
+                        (tokens, task_ids, repeats))
     carry = _drain(carry)
     # Combine (phase IV): sorted merge tree
-    keys, vals = DenseWindow(carry.table).to_records(None, spec.n_procs)
-    W = spec.combine_capacity
-    keys, vals, _ = local_reduce(keys[:], vals[:], W) if W != keys.shape[0] \
-        else (keys, vals, None)
+    keys, vals = combine_records(carry.table, spec)
     keys, vals = tree_combine(keys, vals, AXIS, spec.n_procs)
     return keys[None], vals[None]
 
 
-def run_job(spec: JobSpec, map_fn: Callable, mesh, tokens, repeats):
-    """Full job. tokens: (P, T, S) host array. Returns rank-0 records."""
-    P = _shard_spec()
-    fn = jax.jit(jax.shard_map(
-        partial(_engine, spec, map_fn), mesh=mesh,
-        in_specs=(P, P), out_specs=(P, P)))
-    keys, vals = fn(tokens, repeats)
-    return jax.device_get(keys)[0], jax.device_get(vals)[0]
+@register_backend("1s")
+class OneSidedBackend:
+    """The decoupled engine behind the ``Backend`` protocol."""
+
+    def __init__(self):
+        self._programs: dict = {}
+
+    def run_job(self, spec: JobSpec, map_fn: Callable, mesh, tokens,
+                task_ids, repeats):
+        """Full job. tokens: (P, T, S) host array. Returns rank-0
+        records."""
+        P = _shard_spec()
+        fn = memoized(
+            self._programs, ("run", spec, map_fn, mesh),
+            lambda: jax.jit(shard_map(
+                partial(_engine, spec, map_fn), mesh=mesh,
+                in_specs=(P, P, P), out_specs=(P, P))))
+        keys, vals = fn(tokens, task_ids, repeats)
+        return jax.device_get(keys)[0], jax.device_get(vals)[0]
+
+    def make_segment_fns(self, spec: JobSpec, map_fn: Callable, mesh):
+        """(init_fn, segment_fn, finish_fn) — the checkpointable path.
+
+        ``segment_fn(carry, tokens_seg, task_ids_seg, repeats_seg)``
+        advances ``segment`` tasks and returns the new carry — the host
+        snapshots it between calls (async), which is exactly the paper's
+        per-task window sync.
+        """
+        return memoized(self._programs, ("seg", spec, map_fn, mesh),
+                        lambda: self._build_segment_fns(spec, map_fn, mesh))
+
+    def _build_segment_fns(self, spec: JobSpec, map_fn: Callable, mesh):
+        def seg(carry, tok, tid, rep):
+            carry, _ = lax.scan(partial(_step, spec, map_fn), carry,
+                                (tok, tid, rep))
+            return carry
+
+        def fin(carry):
+            carry = _drain(carry)
+            keys, vals = combine_records(carry.table, spec)
+            return tree_combine(keys, vals, AXIS, spec.n_procs)
+
+        return wrap_segment_fns(mesh, spec, seg, fin)
 
 
-# ---------------------------------------------------------------------------
-# segmented execution (checkpointable — "MPI storage window" sync points)
-# ---------------------------------------------------------------------------
+# -- module-level aliases (pre-registry call sites) -------------------------
 
-def make_segment_fns(spec: JobSpec, map_fn: Callable, mesh):
-    """Returns (init_fn, segment_fn, finish_fn), each jitted over the mesh.
+def run_job(spec, map_fn, mesh, tokens, task_ids, repeats):
+    from repro.core.registry import get_backend
+    return get_backend("1s").run_job(spec, map_fn, mesh, tokens, task_ids,
+                                     repeats)
 
-    ``segment_fn(carry, tokens_seg, repeats_seg)`` advances ``segment`` tasks
-    and returns the new carry — the host snapshots it between calls (async),
-    which is exactly the paper's per-task window sync.
-    """
-    P = _shard_spec()
 
-    def seg(carry, tok, rep):
-        carry, _ = lax.scan(partial(_step, spec, map_fn), carry,
-                            (tok[0], rep[0]))
-        return carry
-
-    def fin(carry):
-        carry = _drain(carry)
-        keys, vals = DenseWindow(carry.table).to_records(None, spec.n_procs)
-        keys, vals = tree_combine(keys, vals, AXIS, spec.n_procs)
-        return keys[None], vals[None]
-
-    def init():
-        c = _init_carry(spec)
-        # broadcast per-shard carry: every leaf gains a leading shard dim
-        return jax.tree.map(lambda x: x[None], c)
-
-    carry_specs = EngineCarry(P, P, P, P, P)
-    seg_sm = jax.jit(jax.shard_map(
-        lambda c, t, r: jax.tree.map(
-            lambda x: x[None],
-            seg(jax.tree.map(lambda x: x[0], c), t, r)),
-        mesh=mesh, in_specs=(carry_specs, P, P), out_specs=carry_specs))
-    fin_sm = jax.jit(jax.shard_map(
-        lambda c: fin(jax.tree.map(lambda x: x[0], c)),
-        mesh=mesh, in_specs=(carry_specs,), out_specs=(P, P)))
-    init_sm = jax.jit(jax.shard_map(
-        lambda: init(), mesh=mesh, in_specs=(), out_specs=carry_specs))
-    return init_sm, seg_sm, fin_sm
+def make_segment_fns(spec, map_fn, mesh):
+    from repro.core.registry import get_backend
+    return get_backend("1s").make_segment_fns(spec, map_fn, mesh)

@@ -44,6 +44,13 @@ def plan_input(n_elements: int, task_size: int, n_procs: int) -> TaskPlan:
     return TaskPlan(n_tasks=n_tasks, task_size=task_size, n_procs=n_procs)
 
 
+def shard_task_ids(plan: TaskPlan) -> np.ndarray:
+    """Host-side: per-rank (tasks_per_proc,) grid of *global* task ids,
+    -1 for padding slots — threaded through the engines so use-cases can
+    key by position (e.g. document = task range)."""
+    return np.stack([plan.tasks_for_rank(r) for r in range(plan.n_procs)])
+
+
 def shard_tasks(tokens: np.ndarray, plan: TaskPlan):
     """Host-side: build per-rank (tasks_per_proc, task_size) input blocks +
     validity mask. Padding tasks are all-sentinel."""

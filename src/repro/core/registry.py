@@ -1,0 +1,131 @@
+"""Backend registry — pluggable MapReduce engines behind one protocol.
+
+The paper compares two engines (decoupled MR-1S vs bulk-synchronous
+MR-2S); this module makes "engine" a first-class, extensible concept
+instead of a hardcoded ``"1s"|"2s"`` string branch:
+
+  * :class:`Backend` — the protocol every engine implements: a blocking
+    ``run_job`` AND a segmented ``make_segment_fns`` triple, so the
+    checkpoint / fault-tolerance layers consume one interface regardless
+    of engine (the segmented path is no longer a onesided-only side-door).
+  * :func:`register_backend` — class decorator; the built-in engines
+    register themselves as ``"1s"`` and ``"2s"`` on import.
+  * :func:`get_backend` / :func:`available_backends` — resolution, with
+    a clear error listing what exists when a name is unknown.
+
+``JobSpec`` (the static engine settings) lives here because it is part
+of the backend interface, shared by every engine.
+"""
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass
+from typing import Callable, Dict, Protocol, Tuple, runtime_checkable
+
+# built-in engines register lazily on first resolution so importing the
+# registry stays cheap (no jax compile machinery pulled in for --help paths)
+_BUILTIN_MODULES = {
+    "1s": "repro.core.onesided",
+    "2s": "repro.core.twosided",
+}
+_REGISTRY: Dict[str, type] = {}
+
+
+@dataclass(frozen=True)
+class JobSpec:
+    """Static engine settings (paper: Init(filename, win_size, chunk_size,
+    task_size, ...))."""
+    vocab: int                   # dense Key-Value window size ("win_size")
+    task_size: int               # elements per Map task
+    push_cap: int                # records per one-sided push per owner
+                                 #   ("maximum bytes per one-sided operation")
+    n_procs: int
+    combine_capacity: int = 0    # 0 -> vocab
+    segment: int = 0             # checkpoint segment (tasks between syncs)
+
+    def __post_init__(self):
+        if not self.combine_capacity:
+            object.__setattr__(self, "combine_capacity", self.vocab)
+
+
+# map_fn(task_tokens, task_id, repeat) -> (keys, values); built from a
+# UseCase by repro.core.usecase.as_map_fn.
+MapFn = Callable
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """What every engine provides. Both methods take the same
+    ``(spec, map_fn, mesh, ...)`` wiring; ``map_fn`` has the signature
+    ``map_fn(task_tokens, task_id, repeat) -> (keys, values)``."""
+
+    name: str
+
+    def run_job(self, spec: JobSpec, map_fn: MapFn, mesh, tokens,
+                task_ids, repeats) -> Tuple:
+        """Blocking end-to-end run. tokens: (P, T, S); task_ids/repeats:
+        (P, T). Returns rank-0 (keys, values) host arrays."""
+        ...
+
+    def make_segment_fns(self, spec: JobSpec, map_fn: MapFn, mesh):
+        """Returns ``(init_fn, segment_fn, finish_fn)``, each jitted over
+        the mesh, sharing the :class:`~repro.core.windows.EngineCarry`
+        carry type — ``segment_fn(carry, tok, tid, rep)`` advances a
+        segment; the host may snapshot the carry between calls (the
+        paper's per-task window sync)."""
+        ...
+
+
+class UnknownBackendError(KeyError):
+    pass
+
+
+def register_backend(name: str):
+    """Class decorator: ``@register_backend("1s")`` makes the engine
+    resolvable by name through :func:`get_backend`."""
+    def deco(cls):
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def _ensure_builtins():
+    for name, module in _BUILTIN_MODULES.items():
+        if name not in _REGISTRY:
+            importlib.import_module(module)
+
+
+_INSTANCES: Dict[str, "Backend"] = {}
+
+
+def get_backend(name: str) -> Backend:
+    """Resolve a backend name to its (singleton) engine instance —
+    singletons so the engines' jitted-program caches persist across
+    jobs."""
+    if name not in _REGISTRY and name in _BUILTIN_MODULES:
+        importlib.import_module(_BUILTIN_MODULES[name])
+    if name not in _REGISTRY:
+        _ensure_builtins()
+        raise UnknownBackendError(
+            f"unknown backend {name!r}; available: {available_backends()}")
+    if name not in _INSTANCES:
+        _INSTANCES[name] = _REGISTRY[name]()
+    return _INSTANCES[name]
+
+
+def memoized(cache: Dict, key, builder):
+    """Tiny jit-program memo helper for backends; falls back to building
+    uncached when the key is unhashable."""
+    try:
+        hit = cache.get(key)
+    except TypeError:
+        return builder()
+    if hit is None:
+        cache[key] = hit = builder()
+    return hit
+
+
+def available_backends():
+    _ensure_builtins()
+    return sorted(_REGISTRY)

@@ -13,6 +13,14 @@ paper keeps these identical on purpose), but:
 
 Master-slave MPI_Scatter task distribution maps to the initial sharded
 device_put of the task grid (the host "master" owns placement).
+
+Registered as backend ``"2s"`` (:mod:`repro.core.registry`). Through the
+shared Backend protocol it also exposes a segmented path: between two
+window syncs the engine is classically bulk-synchronous *over that
+segment* (map-all, barrier, bulk shuffle, reduce spike), and the dense
+Key-Value window carried across segments is what the checkpoint layer
+snapshots — the same :class:`~repro.core.windows.EngineCarry` type as
+MR-1S, with the in-flight ``pending_*`` buffers simply left empty.
 """
 from __future__ import annotations
 
@@ -23,55 +31,105 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.api import JobSpec
 from repro.core.combine import tree_combine
-from repro.core.kv import (KEY_SENTINEL, bucketize, local_reduce,
-                           local_reduce_repeated)
-from repro.core.windows import DenseWindow
-from repro.distributed.collectives import all_to_all_blocks
+from repro.core.kv import local_reduce_repeated, bucketize
+from repro.core.registry import JobSpec, memoized, register_backend
+from repro.core.windows import (AXIS, DenseWindow, combine_records,
+                                init_carry, wrap_segment_fns)
+from repro.distributed.collectives import all_to_all_blocks, shard_map
 
-AXIS = "procs"
 
-
-def _engine(spec: JobSpec, map_fn: Callable, tokens, repeats):
-    tokens, repeats = tokens[0], repeats[0]
+def _map_all(spec: JobSpec, map_fn: Callable, tokens, task_ids, repeats):
+    """The bulk Map phase over a task grid: every task's buckets are
+    buffered before anything is sent (the 2S memory spike)."""
     P, cap = spec.n_procs, spec.push_cap
     T = tokens.shape[0]
 
-    # ---- Map phase (all tasks; buckets buffered, nothing sent yet) --------
     def map_one(_, xs):
-        task, rep = xs
-        keys, vals = map_fn(task, rep)
+        task, tid, rep = xs
+        keys, vals = map_fn(task, tid, rep)
         # same repeated task compute as MR-1S (the engines share the Map /
         # Local Reduce mechanics by design — paper §2.2.1)
         uk, uv = local_reduce_repeated(keys, vals, keys.shape[0], rep)
         bk, bv, counts, (ofk, ofv) = bucketize(uk, uv, P, cap)
         return None, (bk, bv, ofk, ofv)
 
-    _, (BK, BV, OFK, OFV) = lax.scan(map_one, None, (tokens, repeats))
-    # (T, P, cap) -> (P, T*cap): the full send buffer (the 2S memory spike)
+    _, (BK, BV, OFK, OFV) = lax.scan(map_one, None,
+                                     (tokens, task_ids, repeats))
+    # (T, P, cap) -> (P, T*cap): the full send buffer
     BK = jnp.swapaxes(BK, 0, 1).reshape(P, T * cap)
     BV = jnp.swapaxes(BV, 0, 1).reshape(P, T * cap)
+    return BK, BV, OFK, OFV
 
-    # ---- barrier + bulk shuffle (MPI_Alltoallv) ---------------------------
+
+def _shuffle_reduce(win: DenseWindow, BK, BV, OFK, OFV) -> DenseWindow:
+    """Barrier + bulk shuffle (MPI_Alltoallv), then the Reduce spike."""
     RK = all_to_all_blocks(BK, AXIS)
     RV = all_to_all_blocks(BV, AXIS)
-
-    # ---- Reduce (post-shuffle spike) --------------------------------------
-    win = DenseWindow(jnp.zeros((spec.vocab,), jnp.int32))
     win = win.put(RK.reshape(-1), RV.reshape(-1))
-    win = win.put(OFK.reshape(-1), OFV.reshape(-1))   # overflow kept local
+    return win.put(OFK.reshape(-1), OFV.reshape(-1))  # overflow kept local
 
+
+def _engine(spec: JobSpec, map_fn: Callable, tokens, task_ids, repeats):
+    tokens, task_ids, repeats = tokens[0], task_ids[0], repeats[0]
+    BK, BV, OFK, OFV = _map_all(spec, map_fn, tokens, task_ids, repeats)
+    win = DenseWindow(jnp.zeros((spec.vocab,), jnp.int32))
+    win = _shuffle_reduce(win, BK, BV, OFK, OFV)
     # ---- Combine ----------------------------------------------------------
-    keys, vals = win.to_records(None, P)
-    keys, vals = tree_combine(keys, vals, AXIS, P)
+    keys, vals = combine_records(win.table, spec)
+    keys, vals = tree_combine(keys, vals, AXIS, spec.n_procs)
     return keys[None], vals[None]
 
 
-def run_job(spec: JobSpec, map_fn: Callable, mesh, tokens, repeats):
-    from jax.sharding import PartitionSpec as P
-    fn = jax.jit(jax.shard_map(
-        partial(_engine, spec, map_fn), mesh=mesh,
-        in_specs=(P(AXIS), P(AXIS)), out_specs=(P(AXIS), P(AXIS))))
-    keys, vals = fn(tokens, repeats)
-    return jax.device_get(keys)[0], jax.device_get(vals)[0]
+@register_backend("2s")
+class TwoSidedBackend:
+    """The bulk-synchronous engine behind the ``Backend`` protocol."""
+
+    def __init__(self):
+        self._programs: dict = {}
+
+    def run_job(self, spec: JobSpec, map_fn: Callable, mesh, tokens,
+                task_ids, repeats):
+        from jax.sharding import PartitionSpec as P
+        fn = memoized(
+            self._programs, ("run", spec, map_fn, mesh),
+            lambda: jax.jit(shard_map(
+                partial(_engine, spec, map_fn), mesh=mesh,
+                in_specs=(P(AXIS), P(AXIS), P(AXIS)),
+                out_specs=(P(AXIS), P(AXIS)))))
+        keys, vals = fn(tokens, task_ids, repeats)
+        return jax.device_get(keys)[0], jax.device_get(vals)[0]
+
+    def make_segment_fns(self, spec: JobSpec, map_fn: Callable, mesh):
+        """Segmented 2S: each segment runs bulk-synchronously (map-all,
+        bulk shuffle, reduce spike) and folds into the carried window —
+        the window sync point the checkpoint layer snapshots."""
+        return memoized(self._programs, ("seg", spec, map_fn, mesh),
+                        lambda: self._build_segment_fns(spec, map_fn, mesh))
+
+    def _build_segment_fns(self, spec: JobSpec, map_fn: Callable, mesh):
+        def seg(carry, tok, tid, rep):
+            BK, BV, OFK, OFV = _map_all(spec, map_fn, tok, tid, rep)
+            win = _shuffle_reduce(DenseWindow(carry.table), BK, BV,
+                                  OFK, OFV)
+            return carry._replace(table=win.table,
+                                  cursor=carry.cursor + tok.shape[0])
+
+        def fin(carry):
+            keys, vals = combine_records(carry.table, spec)
+            return tree_combine(keys, vals, AXIS, spec.n_procs)
+
+        return wrap_segment_fns(mesh, spec, seg, fin)
+
+
+# -- module-level aliases (pre-registry call sites) -------------------------
+
+def run_job(spec, map_fn, mesh, tokens, task_ids, repeats):
+    from repro.core.registry import get_backend
+    return get_backend("2s").run_job(spec, map_fn, mesh, tokens, task_ids,
+                                     repeats)
+
+
+def make_segment_fns(spec, map_fn, mesh):
+    from repro.core.registry import get_backend
+    return get_backend("2s").make_segment_fns(spec, map_fn, mesh)

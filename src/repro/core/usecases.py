@@ -1,0 +1,149 @@
+"""Built-in scenarios for the unified Job API, each with a numpy oracle.
+
+Three use-cases demonstrate the protocol's range on the same engines:
+
+  * :class:`WordCount`     — the paper's §3.1 PUMA benchmark: <token, 1>.
+  * :class:`Histogram`     — bin token ids into B buckets: <bin, 1> (a
+                             different key space than the emit domain).
+  * :class:`InvertedIndex` — grep-style posting lists with term
+                             frequencies: for a query set Q and documents
+                             made of consecutive tasks, emit
+                             <doc·|Q|+q, 1> — a positional scenario only
+                             possible now that ``map_emit`` sees the
+                             global task id.
+
+All values are additive (the engines' Reduce is an exact keyed sum), so
+every scenario is oracle-exact on both the ``"1s"`` and ``"2s"``
+backends, balanced or not.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kv import KEY_SENTINEL
+
+
+# ---------------------------------------------------------------------------
+# WordCount
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class WordCount:
+    """<token, 1>: counts occurrences of each token id."""
+    vocab: int
+
+    @property
+    def window(self) -> int:
+        return self.vocab
+
+    def map_emit(self, tokens, task_id):
+        valid = tokens != KEY_SENTINEL
+        return tokens, jnp.where(valid, 1, 0).astype(jnp.int32)
+
+
+def wordcount_oracle(tokens, vocab: int) -> Dict[int, int]:
+    """numpy reference: exact counts over the whole input."""
+    tokens = np.asarray(tokens)
+    tokens = tokens[tokens != int(KEY_SENTINEL)]
+    counts = np.bincount(tokens, minlength=vocab)
+    keys = np.nonzero(counts)[0]
+    return {int(k): int(counts[k]) for k in keys}
+
+
+# ---------------------------------------------------------------------------
+# Histogram
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Histogram:
+    """<bin, 1>: equal-width histogram of token ids over [0, vocab)."""
+    vocab: int
+    n_bins: int
+
+    @property
+    def window(self) -> int:
+        return self.n_bins
+
+    def __post_init__(self):
+        # bin mapping is computed in int32 (x64 may be disabled)
+        assert self.vocab * self.n_bins < 2 ** 31, "vocab*n_bins overflows"
+
+    def map_emit(self, tokens, task_id):
+        valid = tokens != KEY_SENTINEL
+        bins = jnp.where(valid, tokens, 0) * self.n_bins // self.vocab
+        keys = jnp.where(valid, bins, KEY_SENTINEL)
+        return keys, jnp.where(valid, 1, 0).astype(jnp.int32)
+
+    def finalize(self, records: Dict[int, int]) -> np.ndarray:
+        out = np.zeros((self.n_bins,), np.int64)
+        for b, c in records.items():
+            out[b] = c
+        return out
+
+
+def histogram_oracle(tokens, vocab: int, n_bins: int) -> np.ndarray:
+    tokens = np.asarray(tokens)
+    tokens = tokens[tokens != int(KEY_SENTINEL)]
+    bins = tokens.astype(np.int64) * n_bins // vocab
+    return np.bincount(bins, minlength=n_bins).astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# InvertedIndex (grep with term frequencies)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class InvertedIndex:
+    """Posting lists for a query set: key = doc · |Q| + query_index.
+
+    A "document" is ``tasks_per_doc`` consecutive Map tasks — derived
+    from the global ``task_id``, which is why this scenario needs the
+    redesigned ``map_emit(tokens, task_id)`` signature.
+    """
+    queries: tuple          # token ids to index (hashable for dataclass)
+    n_docs: int
+    tasks_per_doc: int
+
+    @property
+    def window(self) -> int:
+        return self.n_docs * len(self.queries)
+
+    def map_emit(self, tokens, task_id):
+        q = jnp.asarray(self.queries, jnp.int32)            # (Q,)
+        eq = tokens[:, None] == q[None, :]                  # (S, Q)
+        qidx = jnp.argmax(eq, axis=1).astype(jnp.int32)
+        hit = eq.any(axis=1) & (tokens != KEY_SENTINEL) & (task_id >= 0)
+        doc = jnp.clip(task_id // self.tasks_per_doc, 0, self.n_docs - 1)
+        keys = jnp.where(hit, doc * len(self.queries) + qidx, KEY_SENTINEL)
+        return keys.astype(jnp.int32), jnp.where(hit, 1, 0).astype(jnp.int32)
+
+    def finalize(self, records: Dict[int, int]) -> Dict[int, Dict[int, int]]:
+        """{query_token: {doc: term_frequency}} — sparse posting lists."""
+        out: Dict[int, Dict[int, int]] = {int(t): {} for t in self.queries}
+        Q = len(self.queries)
+        for k, v in records.items():
+            doc, qidx = divmod(int(k), Q)
+            out[int(self.queries[qidx])][doc] = int(v)
+        return out
+
+
+def inverted_index_oracle(tokens, queries, task_size: int,
+                          tasks_per_doc: int, n_docs: int):
+    """numpy reference mirroring the planner's task slicing."""
+    tokens = np.asarray(tokens)
+    out = {int(t): {} for t in queries}
+    n_tasks = (len(tokens) + task_size - 1) // task_size
+    for t in range(n_tasks):
+        doc = min(t // tasks_per_doc, n_docs - 1)
+        chunk = tokens[t * task_size: (t + 1) * task_size]
+        chunk = chunk[chunk != int(KEY_SENTINEL)]
+        for q in queries:
+            n = int((chunk == q).sum())
+            if n:
+                d = out[int(q)]
+                d[doc] = d.get(doc, 0) + n
+    return out

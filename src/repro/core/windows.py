@@ -16,14 +16,23 @@ through the engine's scan:
                         record lands per bucket).
 
 STATUS codes mirror the paper's (e.g. ``STATUS_REDUCE``).
+
+``EngineCarry`` — the windows as carried through an engine's scan — lives
+here too, shared by every backend so the checkpoint / fault-tolerance
+layers see one snapshot type regardless of engine (the MR-2S segmented
+path simply leaves the in-flight ``pending_*`` buffers empty).
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import NamedTuple
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.kv import KEY_SENTINEL
+
+AXIS = "procs"
 
 STATUS_INIT = 0
 STATUS_MAP = 1
@@ -75,3 +84,73 @@ class SortedWindow(NamedTuple):
 
 def status_vector(n_procs: int) -> jnp.ndarray:
     return jnp.full((n_procs,), STATUS_INIT, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# the engine carry (Status + Key-Value + in-flight chunk windows)
+# ---------------------------------------------------------------------------
+
+class EngineCarry(NamedTuple):
+    table: jnp.ndarray       # dense Key-Value window (vocab,)
+    pending_k: jnp.ndarray   # in-flight received chunk (P, cap)
+    pending_v: jnp.ndarray
+    status: jnp.ndarray      # scalar per process (STATUS_*)
+    cursor: jnp.ndarray      # tasks completed (restart point)
+
+
+def init_carry(spec) -> EngineCarry:
+    from repro.distributed.collectives import pvary
+    P, cap = spec.n_procs, spec.push_cap
+    return pvary(EngineCarry(
+        table=jnp.zeros((spec.vocab,), jnp.int32),
+        pending_k=jnp.full((P, cap), KEY_SENTINEL, jnp.int32),
+        pending_v=jnp.zeros((P, cap), jnp.int32),
+        status=jnp.int32(STATUS_MAP),
+        cursor=jnp.int32(0),
+    ), AXIS)
+
+
+def combine_records(table: jnp.ndarray, spec):
+    """Window -> sorted records entering the Combine tree, honoring
+    ``spec.combine_capacity`` identically in every backend and mode."""
+    from repro.core.kv import local_reduce
+    keys, vals = DenseWindow(table).to_records(None, spec.n_procs)
+    W = spec.combine_capacity
+    if W != keys.shape[0]:
+        keys, vals, _ = local_reduce(keys, vals, W)
+    return keys, vals
+
+
+def wrap_segment_fns(mesh, spec, seg_body, fin_body):
+    """Lift per-shard segment bodies into jitted shard_map fns.
+
+    ``seg_body(carry, tok, tid, rep)`` and ``fin_body(carry)`` operate on
+    the un-sharded (per-device) view; the returned
+    ``(init_fn, segment_fn, finish_fn)`` operate on host arrays with a
+    leading shard dimension — the shape every backend's segmented path
+    shares, so the ckpt/ft layers are backend-agnostic.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.collectives import shard_map
+    spec_p = P(AXIS)
+    carry_specs = EngineCarry(*([spec_p] * 5))
+
+    def init():
+        c = init_carry(spec)
+        # broadcast per-shard carry: every leaf gains a leading shard dim
+        return jax.tree.map(lambda x: x[None], c)
+
+    seg_sm = jax.jit(shard_map(
+        lambda c, t, i, r: jax.tree.map(
+            lambda x: x[None],
+            seg_body(jax.tree.map(lambda x: x[0], c), t[0], i[0], r[0])),
+        mesh=mesh, in_specs=(carry_specs, spec_p, spec_p, spec_p),
+        out_specs=carry_specs))
+    fin_sm = jax.jit(shard_map(
+        lambda c: tuple(
+            x[None] for x in fin_body(jax.tree.map(lambda x: x[0], c))),
+        mesh=mesh, in_specs=(carry_specs,), out_specs=(spec_p, spec_p)))
+    init_sm = jax.jit(shard_map(
+        lambda: init(), mesh=mesh, in_specs=(), out_specs=carry_specs))
+    return init_sm, seg_sm, fin_sm

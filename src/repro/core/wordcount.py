@@ -1,7 +1,10 @@
-"""Word-Count use case (paper §3.1, PUMA benchmark).
+"""Word-Count use case (paper §3.1, PUMA benchmark) — legacy module.
 
-Map emits <word, 1>; Reduce sums occurrences; Combine produces the sorted
-<word, count> result. Words arrive as token ids from data/tokenizer.py.
+The declarative version lives in :mod:`repro.core.usecases` (class
+``WordCount`` with ``map_emit``); this module keeps the deprecated
+subclass-style job for one release plus the oracle re-export, so old
+imports (``from repro.core.wordcount import WordCount,
+wordcount_oracle``) keep working.
 
 Imbalance is simulated the way the paper does it (footnote 5): a task is
 *computed* ``repeat`` times while its input is read once — the repeat loop
@@ -15,9 +18,12 @@ from jax import lax
 
 from repro.core.api import MapReduceJob
 from repro.core.kv import KEY_SENTINEL, mix32
+from repro.core.usecases import wordcount_oracle  # noqa: F401  (re-export)
 
 
 class WordCount(MapReduceJob):
+    """Deprecated: use ``repro.core.usecases.WordCount`` with
+    ``repro.core.submit`` instead."""
 
     def map_task(self, toks: jnp.ndarray, repeat: jnp.ndarray):
         def body(i, acc):
@@ -31,13 +37,3 @@ class WordCount(MapReduceJob):
         # simulated work cannot be dead-code-eliminated
         vals = jnp.where(valid, 1, 0) + (acc & 0)
         return toks, vals
-
-
-def wordcount_oracle(tokens, vocab: int):
-    """numpy reference for tests: exact counts over the whole input."""
-    import numpy as np
-    tokens = np.asarray(tokens)
-    tokens = tokens[tokens != int(KEY_SENTINEL)]
-    counts = np.bincount(tokens, minlength=vocab)
-    keys = np.nonzero(counts)[0]
-    return {int(k): int(counts[k]) for k in keys}

@@ -1,6 +1,12 @@
 """Collective helpers shared by the MapReduce engine and the MoE layer.
 
-Everything here runs *inside* ``shard_map`` regions (named-axis collectives).
+Everything here runs *inside* ``shard_map`` regions (named-axis
+collectives). The module doubles as the jax version-compat seam: the
+container pins jax 0.4.x, where ``shard_map`` still lives under
+``jax.experimental``, ``lax.axis_size`` does not exist (``lax.psum(1,
+axis)`` folds to a concrete int at trace time — the classic idiom), and
+the VMA type system (``lax.pcast``) has not landed. Newer jax keeps
+working through the same wrappers.
 """
 from __future__ import annotations
 
@@ -8,15 +14,41 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+if hasattr(jax, "shard_map"):                       # jax >= 0.6
+    def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+                  check_vma=None):
+        kw = {}
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+else:                                               # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map_exp
+
+    def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+                  check_vma=None):
+        # check_rep predates (and over-rejects) the collectives we use.
+        # axis_names is dropped: 0.4.x partial-auto mode cannot be
+        # differentiated through, while full-manual over a mesh whose
+        # extra axes are simply unreferenced is semantically identical.
+        return _shard_map_exp(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=False)
+
 
 def axis_size(name: str) -> int:
-    return lax.axis_size(name)
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(name)
+    return lax.psum(1, name)        # concrete int at trace time
 
 
 def pvary(x, axis):
     """Mark fresh constants as axis-varying inside shard_map regions
     (required by the VMA type system for scan carries that meet collective
-    outputs)."""
+    outputs; identity on jax versions without VMA)."""
+    if not hasattr(lax, "pcast"):
+        return x
     return jax.tree.map(lambda a: lax.pcast(a, (axis,), to="varying"), x)
 
 
@@ -27,13 +59,13 @@ def all_to_all_blocks(x: jnp.ndarray, axis: str) -> jnp.ndarray:
     JAX-native carrier for the paper's bucketed shuffle (MPI_Alltoallv with
     fixed-capacity buckets).
     """
-    P = lax.axis_size(axis)
+    P = axis_size(axis)
     assert x.shape[0] == P, (x.shape, P)
     return lax.all_to_all(x, axis, split_axis=0, concat_axis=0, tiled=False)
 
 
 def ring_send_right(x: jnp.ndarray, axis: str, shift: int = 1) -> jnp.ndarray:
-    P = lax.axis_size(axis)
+    P = axis_size(axis)
     perm = [(i, (i + shift) % P) for i in range(P)]
     return lax.ppermute(x, axis, perm)
 
@@ -41,7 +73,7 @@ def ring_send_right(x: jnp.ndarray, axis: str, shift: int = 1) -> jnp.ndarray:
 def tree_gather_permute(x, axis: str, level: int):
     """collective_permute used by the combine tree: at ``level`` l, rank
     i + 2**l sends its payload to rank i (for i multiple of 2**(l+1))."""
-    P = lax.axis_size(axis)
+    P = axis_size(axis)
     stride = 1 << level
     perm = []
     for i in range(0, P, stride * 2):

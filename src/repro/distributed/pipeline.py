@@ -34,6 +34,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed.collectives import axis_size, shard_map
 from repro.config import ModelConfig
 from repro.models.layers import apply_norm, cross_entropy, embed_tokens, \
     unembed
@@ -69,9 +70,11 @@ def gpipe_loss_fn(cfg: ModelConfig, params: Dict, batch: Dict, *, mesh,
     tok_mb = tokens.reshape(M, mb, S)
     lab_mb = labels.reshape(M, mb, S)
 
-    def staged(blocks_loc, embed_p, head_p):
-        n_stages = lax.axis_size(stage_axis)
-        sid = lax.axis_index(stage_axis)
+    # tok_mb/lab_mb enter as explicit shard_map operands (not closure
+    # captures): jax 0.4.x shard_map cannot infer specs for captured
+    # tracers when the region is transposed for the backward pass
+    def staged(blocks_loc, embed_p, head_p, tok_mb, lab_mb):
+        n_stages = axis_size(stage_axis)
         positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32),
                                      (mb, S))
         fwd = partial(_stage_fwd, cfg, blocks_loc, positions=positions,
@@ -80,6 +83,10 @@ def gpipe_loss_fn(cfg: ModelConfig, params: Dict, batch: Dict, *, mesh,
         perm = [(i, i + 1) for i in range(n_stages - 1)]
 
         def step(carry, t):
+            # axis_index is taken per-step on purpose: as a loop-invariant
+            # scalar it would become a rank-0 shard_map residual, which
+            # jax 0.4.x partial-eval mislabels (see note at the call site)
+            sid = lax.axis_index(stage_axis)
             x_in, loss_sum, tok_sum = carry
             m = t - sid                          # microbatch at this stage
             valid = (m >= 0) & (m < M)
@@ -92,8 +99,7 @@ def gpipe_loss_fn(cfg: ModelConfig, params: Dict, batch: Dict, *, mesh,
             h = apply_norm(cfg, head_p["final_norm"], y)
             logits = unembed(cfg, head_p, h)
             ce = cross_entropy(logits, lab_mb[m_c])
-            is_last = sid == n_stages - 1
-            use = valid & is_last
+            use = valid & (sid == n_stages - 1)
             loss_sum = loss_sum + jnp.where(use, ce, 0.0)
             tok_sum = tok_sum + jnp.where(use, 1.0, 0.0)
             # hand off to the next stage (ppermute; transposed in backward)
@@ -105,25 +111,30 @@ def gpipe_loss_fn(cfg: ModelConfig, params: Dict, batch: Dict, *, mesh,
         carry = (zero_x, jnp.float32(0.0), jnp.float32(0.0))
         (x, loss_sum, tok_sum), _ = lax.scan(
             step, carry, jnp.arange(M + n_stages - 1))
-        # only the last stage holds the loss — share it
-        loss = lax.psum(loss_sum, stage_axis) / jnp.maximum(
-            lax.psum(tok_sum, stage_axis), 1.0)
-        return loss
+        # only the last stage holds the loss — share it. The division by
+        # the token count happens OUTSIDE the shard_map: as an internal
+        # op it would make tok_sum a rank-0 residual, which jax 0.4.x
+        # partial-eval mislabels with dim-0 axis names and the backward
+        # pass then rejects (_SpecError).
+        return (lax.psum(loss_sum, stage_axis)[None],
+                lax.psum(tok_sum, stage_axis)[None])
 
     # check_vma=False: the model's inner scans allocate fresh (pod-
     # invariant) carries which the varying-axis type system would reject;
     # semantics are unaffected (ppermute/psum behave classically)
-    loss = jax.shard_map(
+    loss_sum, tok_sum = shard_map(
         staged, mesh=mesh,
-        in_specs=(P(stage_axis), P(), P()),
-        out_specs=P(),
+        in_specs=(P(stage_axis), P(), P(), P(), P()),
+        out_specs=(P(), P()),
         axis_names={stage_axis},
         check_vma=False,
     )(params["blocks"],
       {"embed_tokens": params["embed_tokens"]},
       {"final_norm": params["final_norm"],
        **({"lm_head": params["lm_head"]} if "lm_head" in params
-          else {"embed_tokens": params["embed_tokens"]})})
+          else {"embed_tokens": params["embed_tokens"]})},
+      tok_mb, lab_mb)
+    loss = loss_sum[0] / jnp.maximum(tok_sum[0], 1.0)
     return loss, {"ce": loss, "aux": jnp.float32(0.0)}
 
 
@@ -150,13 +161,16 @@ def make_pp_train_step(cfg: ModelConfig, tcfg, *, mesh,
     from repro.optim.adamw import adamw_update
     from repro.train.train_step import TrainState
 
+    # inner jit is load-bearing on jax 0.4.x: differentiating the raw
+    # shard_map hits a partial-eval path that mislabels rank-0 residuals
+    # (_SpecError); grad-of-jit takes the pjit path, which is sound
+    loss_jit = jax.jit(lambda p, b: gpipe_loss_fn(
+        cfg, p, b, mesh=mesh, n_microbatches=n_microbatches,
+        stage_axis=stage_axis, remat=tcfg.remat_policy))
+
     def train_step(state: TrainState, batch: Dict):
         (loss, metrics), grads = jax.value_and_grad(
-            lambda p: gpipe_loss_fn(cfg, p, batch, mesh=mesh,
-                                    n_microbatches=n_microbatches,
-                                    stage_axis=stage_axis,
-                                    remat=tcfg.remat_policy),
-            has_aux=True)(state.params)
+            lambda p: loss_jit(p, batch), has_aux=True)(state.params)
         new_params, new_opt, om = adamw_update(state.params, grads,
                                                state.opt, tcfg)
         return TrainState(new_params, new_opt, state.residual), \

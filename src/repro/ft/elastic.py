@@ -51,3 +51,11 @@ def fold_windows(tables: np.ndarray, n_new: int) -> np.ndarray:
 
 def surviving_ranks(n_procs: int, failed: List[int]) -> List[int]:
     return [r for r in range(n_procs) if r not in set(failed)]
+
+
+def fold_job_windows(handle, n_new: int) -> np.ndarray:
+    """Redistribute a mid-job segmented ``JobHandle``'s per-rank dense
+    Key-Value windows onto ``n_new`` surviving ranks. The folded tables
+    seed a re-submitted job on the smaller mesh; exactness is guaranteed
+    by the Combine dup-sum (see :func:`fold_windows`)."""
+    return fold_windows(handle.windows(), n_new)

@@ -6,6 +6,12 @@ module adds the second line: the host tracks per-rank segment throughput
 and re-plans the *remaining* tasks proportionally at every segment
 boundary. Re-planning (not re-issuing in-flight work) keeps exactly-once
 semantics — no dedup machinery needed, results stay exact.
+
+With the unified Job API the natural integration point is a segmented
+``JobHandle``: call :func:`plan_next_segment` between ``handle.step()``
+calls to redistribute ``handle.remaining_task_ids()``, and seed the
+tracker from a completed job's per-rank work stats via
+:func:`tracker_from_result`.
 """
 from __future__ import annotations
 
@@ -61,3 +67,27 @@ def rebalance_tasks(task_ids: List[int], rate: np.ndarray,
         out[r, :take] = task_ids[cursor: cursor + take]
         cursor += take
     return out
+
+
+# ---------------------------------------------------------------------------
+# unified Job API integration
+# ---------------------------------------------------------------------------
+
+def tracker_from_result(result, alpha: float = 0.5) -> ThroughputTracker:
+    """Seed a tracker from a completed job's per-rank work stats
+    (``JobResult.work_per_rank``): ranks that carried more compute-repeats
+    in the same wall time were proportionally faster."""
+    work = np.asarray(result.work_per_rank, np.float64)
+    tr = ThroughputTracker(n_procs=len(work), alpha=alpha)
+    tr.rate = np.maximum(work, 1e-9) / max(result.wall_time, 1e-9)
+    return tr
+
+
+def plan_next_segment(handle, tracker: ThroughputTracker,
+                      tasks_per_segment: int = 0) -> np.ndarray:
+    """Re-plan a segmented ``JobHandle``'s remaining tasks proportional to
+    tracked throughput. Returns the (n_procs, width) task-id grid for the
+    next segment (-1 padded); every remaining task appears exactly once."""
+    remaining = handle.remaining_task_ids()
+    per_seg = tasks_per_segment or len(remaining)
+    return rebalance_tasks(remaining.tolist(), tracker.rate, per_seg)

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.distributed.collectives import shard_map
 from repro.config import ModelConfig
 from repro.models.layers import _init, apply_rope, rms_over
 
@@ -295,7 +296,7 @@ def decode_attention_sharded(q, cache_k, cache_v, t, *, mesh, dp_entry,
         B_, KV, G, _ = o.shape
         return o.reshape(B_, KV * G, hd).astype(q.dtype)
 
-    return jax.shard_map(
+    return shard_map(
         inner, mesh=mesh,
         in_specs=(P(dp_entry, None, None), P(dp_entry, seq_axis, None, None),
                   P(dp_entry, seq_axis, None, None), P()),
@@ -318,7 +319,7 @@ def update_cache_sharded(cache, new, t, *, mesh, dp_entry,
         updated = lax.dynamic_update_slice_in_dim(c, n[:, None], pos, 1)
         return jnp.where(in_range, updated, c)
 
-    return jax.shard_map(
+    return shard_map(
         inner, mesh=mesh,
         in_specs=(P(dp_entry, seq_axis, None, None),
                   P(dp_entry, None, None), P()),
@@ -518,7 +519,7 @@ def mla_decode(cfg: ModelConfig, p: Dict, x, cache: Dict, t, *,
         return o_l.astype(x.dtype), cache_b
 
     if mesh is not None:
-        o_l, new_cache = jax.shard_map(
+        o_l, new_cache = shard_map(
             inner, mesh=mesh,
             in_specs=(P(dp_entry, None, None),
                       P(dp_entry, "model", None), P(dp_entry, None), P()),

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed.collectives import axis_size, shard_map
 from repro.config import ModelConfig
 from repro.models.layers import _init
 
@@ -83,7 +84,7 @@ def _aux_loss(cfg: ModelConfig, probs, ids, sum_axes=()):
     for ax in sum_axes:
         counts = lax.psum(counts, ax)
         sum_probs = lax.psum(sum_probs, ax)
-        n_shards *= lax.axis_size(ax)
+        n_shards *= axis_size(ax)
     T_tot = T * n_shards
     frac_tokens = counts / max(T_tot * cfg.top_k, 1)
     frac_probs = sum_probs / max(T_tot, 1)
@@ -256,7 +257,7 @@ def _dispatch_1s(cfg, p, x_flat, ids, gates, tp, E_loc, axis, vma_axes=(),
     z_idx = jnp.full((tp * cap,), -1, jnp.int32)
     z_gates = jnp.zeros((Tkg,), jnp.float32)
     carry = (y0, z_tok, z_eloc, z_idx, z_gates)
-    if vma_axes:
+    if vma_axes and hasattr(lax, "pcast"):
         carry = jax.tree.map(
             lambda a: lax.pcast(a, vma_axes, to="varying"), carry)
     # G pushes + 1 drain step for the in-flight group
@@ -320,7 +321,7 @@ def moe_forward(cfg: ModelConfig, p: Dict, x, *, mesh=None, dp_entry=None,
     def body(x_blk, *expert_leaves):
         p_blk = dict(zip(expert_keys, expert_leaves))
         p_blk["router"] = p["router"]
-        tp = lax.axis_size(EP_AXIS) if mesh is not None else 1
+        tp = axis_size(EP_AXIS) if mesh is not None else 1
         axis = EP_AXIS if mesh is not None else None
         vma = tuple(mesh.axis_names) if mesh is not None else ()
         E_loc = p_blk["we_gate"].shape[0]
@@ -369,7 +370,7 @@ def moe_forward(cfg: ModelConfig, p: Dict, x, *, mesh=None, dp_entry=None,
         et = cfg.expert_tp_axis or None
         w_specs = [P(EP_AXIS, None, et), P(EP_AXIS, None, et),
                    P(EP_AXIS, et, None)]
-        y, aux = jax.shard_map(
+        y, aux = shard_map(
             body, mesh=mesh,
             in_specs=(P(dp_entry, seq_entry, None), *w_specs),
             out_specs=(P(dp_entry, seq_entry, None), P()),

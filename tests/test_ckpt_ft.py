@@ -57,6 +57,7 @@ def test_restore_specific_step_and_atomicity(tmp_path):
     assert mgr.latest_step() == 5
 
 
+@pytest.mark.slow
 def test_simulated_failure_restart_resumes_training(tmp_path):
     """Kill-and-restart: a fresh process state restored from the manifest
     continues bit-identically (same loss trajectory)."""
@@ -98,42 +99,37 @@ def test_simulated_failure_restart_resumes_training(tmp_path):
     np.testing.assert_allclose(losses_b, losses_a[3:], rtol=1e-6)
 
 
+@pytest.mark.slow
 def test_engine_window_checkpoint_restart(tmp_path, devices8):
     """MapReduce window snapshot → restart produces the exact result
-    (the MPI-storage-windows fault-tolerance path, Fig 5)."""
+    (the MPI-storage-windows fault-tolerance path, Fig 5) — through the
+    JobHandle lifecycle, for BOTH backends (the segmented path is part of
+    the shared Backend protocol)."""
     out = devices8(f"""
         import numpy as np, jax
         from collections import Counter
         from repro.ckpt.checkpoint import CheckpointManager
-        from repro.core import onesided
-        from repro.core.wordcount import WordCount
-        from repro.core.kv import KEY_SENTINEL
+        from repro.core import JobConfig, submit
+        from repro.core.usecases import WordCount
 
         rng = np.random.default_rng(5)
         VOCAB, N, P, task = 300, 16384, 8, 512
         tokens = rng.integers(0, VOCAB, size=N).astype(np.int32)
         oracle = dict(Counter(tokens.tolist()))
-        job = WordCount(backend="1s")
-        job.init(tokens, vocab=VOCAB, task_size=task, push_cap=1024,
-                 n_procs=P)
-        init_fn, seg_fn, fin_fn = onesided.make_segment_fns(
-            job.spec, job.map_task, job.mesh)
-        mgr = CheckpointManager({str(tmp_path)!r})
-        carry = init_fn()
-        T = job._tokens.shape[1]
-        for s in range(0, T, 2):
-            carry = seg_fn(carry, job._tokens[:, s:s+2],
-                           job._repeats[:, s:s+2])
-            mgr.save_async(s, carry, extra={{"next": s + 2}})
-        mgr.wait()
-        # "crash"; restore the LAST snapshot in a fresh carry
-        _, carry_r, extra = mgr.restore(jax.eval_shape(lambda: carry))
-        assert extra["next"] == T
-        keys, vals = fin_fn(carry_r)
-        keys, vals = np.asarray(keys)[0], np.asarray(vals)[0]
-        valid = keys != int(KEY_SENTINEL)
-        got = dict(zip(keys[valid].tolist(), vals[valid].tolist()))
-        assert got == oracle
+        for backend in ("1s", "2s"):
+            cfg = JobConfig(usecase=WordCount(vocab=VOCAB), backend=backend,
+                            task_size=task, push_cap=1024, n_procs=P,
+                            segment=2)
+            mgr = CheckpointManager({str(tmp_path)!r} + "-" + backend)
+            handle = submit(cfg, tokens)
+            while handle.step():
+                handle.checkpoint(mgr)      # async (overlaps next segment)
+            handle.checkpoint(mgr)
+            mgr.wait()
+            # "crash"; a fresh handle restores the LAST snapshot
+            h2 = submit(cfg, tokens).restore(mgr)
+            assert h2.cursor == handle.cursor
+            assert h2.result().records == oracle, backend
         print("WINDOW-CKPT-OK")
     """)
     assert "WINDOW-CKPT-OK" in out
@@ -179,3 +175,54 @@ def test_straggler_detection_and_rebalance():
     flat = assign[assign >= 0]
     assert sorted(flat.tolist()) == list(range(16))
     assert sizes[3] == sizes.min()   # slow rank gets fewest tasks
+
+
+# ---------------------------------------------------------------------------
+# unified Job API integration (single real device, P=1..2 planning only)
+# ---------------------------------------------------------------------------
+
+def test_straggler_plan_from_job_handle():
+    """plan_next_segment re-plans exactly the handle's remaining tasks."""
+    from repro.core import JobConfig, submit
+    from repro.core.usecases import WordCount
+    from repro.ft.straggler import plan_next_segment, tracker_from_result
+
+    tokens = np.arange(4096, dtype=np.int32) % 64
+    cfg = JobConfig(usecase=WordCount(vocab=64), backend="1s",
+                    task_size=512, push_cap=512, n_procs=1, segment=2)
+    handle = submit(cfg, tokens)
+    handle.step()                            # 2 of 8 tasks done
+    remaining = handle.remaining_task_ids()
+    assert sorted(remaining.tolist()) == list(range(2, 8))
+
+    res = submit(JobConfig(usecase=WordCount(vocab=64), backend="1s",
+                           task_size=512, push_cap=512, n_procs=1),
+                 tokens).result()
+    tr = tracker_from_result(res)
+    assign = plan_next_segment(handle, tr)
+    flat = assign[assign >= 0]
+    assert sorted(flat.tolist()) == sorted(remaining.tolist())
+
+
+def test_elastic_fold_job_windows_preserves_counts():
+    """Mid-job windows folded onto fewer ranks conserve every count —
+    including the 1s backend's in-flight pending chunk: after the map
+    phase completes, the folded tables must hold ALL N records."""
+    from repro.core import JobConfig, submit
+    from repro.core.usecases import WordCount
+    from repro.ft.elastic import fold_job_windows
+
+    N = 8192
+    tokens = (np.arange(N, dtype=np.int32) * 7) % 50
+    cfg = JobConfig(usecase=WordCount(vocab=50), backend="1s",
+                    task_size=512, push_cap=512, n_procs=1, segment=4)
+    handle = submit(cfg, tokens)
+    handle.step()
+    tables = handle.windows()
+    folded = fold_job_windows(handle, 1)
+    assert folded.shape == (1, 50)
+    np.testing.assert_array_equal(folded.sum(0), tables.sum(0))
+    # drain the map phase: nothing may be lost to the in-flight buffer
+    while handle.step():
+        pass
+    assert fold_job_windows(handle, 1).sum() == N

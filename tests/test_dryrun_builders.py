@@ -34,7 +34,10 @@ def test_builders_compile_all_kinds(devices8):
                     *args).compile()
                 txt = compiled.as_text()
                 cb = collective_bytes(txt)
-                assert compiled.cost_analysis().get("flops", 0) > 0
+                ca = compiled.cost_analysis()
+                if isinstance(ca, (list, tuple)):   # jax 0.4.x
+                    ca = ca[0]
+                assert ca.get("flops", 0) > 0
                 print(arch, kind, "ok", int(cb.get("total", 0)))
 
         # §Perf variants lower too (flat_dp train; serve decode)

@@ -2,16 +2,20 @@
 
 Each test spawns one subprocess with 8 placeholder CPU devices (the main
 pytest process keeps the single real device, per the dry-run isolation
-rule) and verifies exact results vs a host oracle.
+rule) and verifies exact results vs a host oracle, through the unified
+``submit()/JobHandle`` API.
 """
 import pytest
+
+pytestmark = pytest.mark.slow
 
 
 def test_wordcount_both_backends_exact(devices8):
     out = devices8("""
         import numpy as np
         from collections import Counter
-        from repro.core.wordcount import WordCount
+        from repro.core import JobConfig, submit
+        from repro.core.usecases import WordCount
         rng = np.random.default_rng(0)
         for VOCAB, N, task, cap in [(1000, 65536, 2048, 1024),
                                     (127, 8192, 512, 64),
@@ -19,11 +23,13 @@ def test_wordcount_both_backends_exact(devices8):
             tokens = rng.integers(0, VOCAB, size=N).astype(np.int32)
             oracle = dict(Counter(tokens.tolist()))
             for backend in ("1s", "2s"):
-                job = WordCount(backend=backend)
-                job.init(tokens, vocab=VOCAB, task_size=task, push_cap=cap,
-                         n_procs=8)
-                job.run()
-                assert job.result_dict() == oracle, (VOCAB, N, backend)
+                cfg = JobConfig(usecase=WordCount(vocab=VOCAB),
+                                backend=backend, task_size=task,
+                                push_cap=cap, n_procs=8)
+                res = submit(cfg, tokens).result()
+                assert res.records == oracle, (VOCAB, N, backend)
+                assert res.n_tasks == (N + task - 1) // task
+                assert res.tasks_per_rank.sum() == res.n_tasks
         print("EXACT")
     """)
     assert "EXACT" in out
@@ -32,11 +38,13 @@ def test_wordcount_both_backends_exact(devices8):
 def test_wordcount_unbalanced_workload_exact(devices8):
     """The paper's imbalance model (footnote 5): a task is *computed*
     ``repeat`` times while its input is read once — so the result must stay
-    exactly the balanced result, for both engines."""
+    exactly the balanced result, for both engines. The JobResult must also
+    expose the imbalance it ran under."""
     out = devices8("""
         import numpy as np
         from collections import Counter
-        from repro.core.wordcount import WordCount
+        from repro.core import JobConfig, submit
+        from repro.core.usecases import WordCount
         from repro.data.corpus import imbalance_repeats
         rng = np.random.default_rng(1)
         VOCAB, N, P = 500, 32768, 8
@@ -48,11 +56,11 @@ def test_wordcount_unbalanced_workload_exact(devices8):
         assert reps.max() == 4 and reps.min() == 1
         oracle = dict(Counter(tokens.tolist()))
         for backend in ("1s", "2s"):
-            job = WordCount(backend=backend)
-            job.init(tokens, vocab=VOCAB, task_size=task, push_cap=2048,
-                     n_procs=P, repeats=reps)
-            job.run()
-            assert job.result_dict() == oracle, backend
+            cfg = JobConfig(usecase=WordCount(vocab=VOCAB), backend=backend,
+                            task_size=task, push_cap=2048, n_procs=P)
+            res = submit(cfg, tokens, repeats=reps).result()
+            assert res.records == oracle, backend
+            assert res.imbalance > 1.0
         print("EXACT-UNBALANCED")
     """)
     assert "EXACT-UNBALANCED" in out
@@ -61,19 +69,19 @@ def test_wordcount_unbalanced_workload_exact(devices8):
 def test_backends_agree_and_sorted(devices8):
     out = devices8("""
         import numpy as np
-        from repro.core.wordcount import WordCount
+        from repro.core import JobConfig, submit
+        from repro.core.usecases import WordCount
         from repro.core.kv import KEY_SENTINEL
         rng = np.random.default_rng(7)
         tokens = rng.integers(0, 300, size=16384).astype(np.int32)
         res = {}
         for backend in ("1s", "2s"):
-            job = WordCount(backend=backend)
-            job.init(tokens, vocab=300, task_size=1024, push_cap=512,
-                     n_procs=8)
-            keys, vals = job.run()
-            valid = keys != int(KEY_SENTINEL)
-            assert (np.diff(keys[valid]) > 0).all()   # Combine returns sorted
-            res[backend] = (keys[valid].tolist(), vals[valid].tolist())
+            cfg = JobConfig(usecase=WordCount(vocab=300), backend=backend,
+                            task_size=1024, push_cap=512, n_procs=8)
+            r = submit(cfg, tokens).result()
+            valid = r.keys != int(KEY_SENTINEL)
+            assert (np.diff(r.keys[valid]) > 0).all()  # Combine sorts
+            res[backend] = (r.keys[valid].tolist(), r.values[valid].tolist())
         assert res["1s"] == res["2s"]
         print("AGREE")
     """)
@@ -86,72 +94,98 @@ def test_push_cap_overflow_ownership_transfer(devices8):
     out = devices8("""
         import numpy as np
         from collections import Counter
-        from repro.core.wordcount import WordCount
+        from repro.core import JobConfig, submit
+        from repro.core.usecases import WordCount
         rng = np.random.default_rng(2)
         # skewed keys: heavy hitters overflow the per-owner bucket cap
         tokens = rng.zipf(1.2, size=32768).astype(np.int32) % 100
         tokens = tokens.astype(np.int32)
         oracle = dict(Counter(tokens.tolist()))
         for backend in ("1s", "2s"):
-            job = WordCount(backend=backend)
-            job.init(tokens, vocab=100, task_size=1024, push_cap=4,
-                     n_procs=8)
-            job.run()
-            assert job.result_dict() == oracle, backend
+            cfg = JobConfig(usecase=WordCount(vocab=100), backend=backend,
+                            task_size=1024, push_cap=4, n_procs=8)
+            res = submit(cfg, tokens).result()
+            assert res.records == oracle, backend
         print("OVERFLOW-EXACT")
     """)
     assert "OVERFLOW-EXACT" in out
 
 
-def test_segmented_engine_matches_monolithic(devices8):
-    """run_segments (the checkpointable path) == run_job, segment by
-    segment, including a simulated restart from a mid-job snapshot."""
+def test_segmented_matches_oneshot_both_backends(devices8):
+    """The segmented lifecycle (step()-driven, checkpointable) must equal
+    the oneshot result for EVERY backend — the segmented path is part of
+    the shared Backend protocol, not a onesided side-door. Includes a
+    simulated restart from a mid-job in-memory snapshot."""
     out = devices8("""
+        import dataclasses
         import numpy as np, jax
         from collections import Counter
-        from repro.core import onesided
-        from repro.core.api import JobSpec
-        from repro.core.wordcount import WordCount
-        from repro.core.kv import KEY_SENTINEL
-        from repro.distributed.mesh import local_mesh
+        from repro.core import JobConfig, submit
+        from repro.core.usecases import WordCount
 
         rng = np.random.default_rng(5)
         VOCAB, N, P, task = 400, 32768, 8, 512
         tokens = rng.integers(0, VOCAB, size=N).astype(np.int32)
         oracle = dict(Counter(tokens.tolist()))
 
-        job = WordCount(backend="1s")
-        job.init(tokens, vocab=VOCAB, task_size=task, push_cap=1024,
-                 n_procs=P)
-        spec, mesh = job.spec, job.mesh
-        toks, reps = job._tokens, job._repeats
-        T = toks.shape[1]
-        init_fn, seg_fn, fin_fn = onesided.make_segment_fns(
-            spec, job.map_task, mesh)
-        carry = init_fn()
-        seg = 2
-        snapshots = []
-        for s in range(0, T, seg):
-            tok_s = toks[:, s:s + seg]
-            rep_s = reps[:, s:s + seg]
-            carry = seg_fn(carry, tok_s, rep_s)
-            snapshots.append(jax.tree.map(np.asarray, carry))
-        keys, vals = fin_fn(carry)
-        keys, vals = np.asarray(keys)[0], np.asarray(vals)[0]
-        valid = keys != int(KEY_SENTINEL)
-        got = dict(zip(keys[valid].tolist(), vals[valid].tolist()))
-        assert got == oracle, "segmented != oracle"
+        for backend in ("1s", "2s"):
+            cfg = JobConfig(usecase=WordCount(vocab=VOCAB), backend=backend,
+                            task_size=task, push_cap=1024, n_procs=P,
+                            segment=2)
+            handle = submit(cfg, tokens)
+            snapshots = []
+            while True:
+                more = handle.step()
+                snapshots.append((handle.cursor,
+                                  jax.tree.map(np.asarray, handle.carry)))
+                if not more:
+                    break
+            res = handle.result()
+            assert res.records == oracle, (backend, "segmented != oracle")
 
-        # restart: resume from snapshot after segment 1 and replay the rest
-        carry2 = jax.tree.map(lambda a: a, snapshots[0])   # restored copy
-        for s in range(seg, T, seg):
-            carry2 = seg_fn(carry2, toks[:, s:s+seg], reps[:, s:s+seg])
-        k2, v2 = fin_fn(carry2)
-        k2, v2 = np.asarray(k2)[0], np.asarray(v2)[0]
-        assert (k2 == keys).all() and (v2 == vals).all(), "restart mismatch"
+            oneshot = submit(dataclasses.replace(cfg, segment=0),
+                             tokens).result()
+            assert oneshot.records == res.records, backend
+
+            # restart: resume from the first snapshot and replay the rest
+            cur0, carry0 = snapshots[0]
+            h2 = submit(cfg, tokens).load(carry0, cur0)
+            r2 = h2.result()
+            assert (r2.keys == res.keys).all(), (backend, "restart keys")
+            assert (r2.values == res.values).all(), (backend, "restart vals")
         print("SEGMENTED-EXACT")
     """, timeout=560)
     assert "SEGMENTED-EXACT" in out
+
+
+def test_new_usecases_both_backends_8dev(devices8):
+    """Histogram and InvertedIndex are oracle-exact on the 8-device mesh
+    for both backends (scenario diversity through one API)."""
+    out = devices8("""
+        import numpy as np
+        from repro.core import (JobConfig, submit, Histogram, InvertedIndex,
+                                histogram_oracle, inverted_index_oracle)
+        rng = np.random.default_rng(3)
+        VOCAB, N, P, task = 1024, 32768, 8, 512
+        tokens = rng.integers(0, VOCAB, size=N).astype(np.int32)
+        n_tasks = N // task
+        for backend in ("1s", "2s"):
+            h = submit(JobConfig(usecase=Histogram(vocab=VOCAB, n_bins=32),
+                                 backend=backend, task_size=task,
+                                 push_cap=task, n_procs=P), tokens).result()
+            assert (h.output == histogram_oracle(tokens, VOCAB, 32)).all()
+
+            q = (5, 99, 512)
+            tpd = n_tasks // 4
+            uc = InvertedIndex(queries=q, n_docs=4, tasks_per_doc=tpd)
+            r = submit(JobConfig(usecase=uc, backend=backend,
+                                 task_size=task, push_cap=task,
+                                 n_procs=P), tokens).result()
+            assert r.output == inverted_index_oracle(
+                tokens, q, task, tpd, 4), backend
+        print("USECASES-EXACT")
+    """)
+    assert "USECASES-EXACT" in out
 
 
 def test_tree_combine_multiproc_sorted_merge(devices8):
@@ -161,6 +195,7 @@ def test_tree_combine_multiproc_sorted_merge(devices8):
         from jax.sharding import PartitionSpec as P
         from repro.core.combine import tree_combine
         from repro.core.kv import KEY_SENTINEL
+        from repro.distributed.collectives import shard_map
         from repro.distributed.mesh import local_mesh
         mesh = local_mesh((8,), ("procs",))
         rng = np.random.default_rng(11)
@@ -181,9 +216,9 @@ def test_tree_combine_multiproc_sorted_merge(devices8):
             kk, vv = tree_combine(k[0], v[0], "procs", 8)
             return kk[None], vv[None]
 
-        fn = jax.jit(jax.shard_map(body, mesh=mesh,
-                                   in_specs=(P("procs"), P("procs")),
-                                   out_specs=(P("procs"), P("procs"))))
+        fn = jax.jit(shard_map(body, mesh=mesh,
+                               in_specs=(P("procs"), P("procs")),
+                               out_specs=(P("procs"), P("procs"))))
         ok, ov = fn(keys, vals)
         ok, ov = np.asarray(ok)[0], np.asarray(ov)[0]
         valid = ok != int(KEY_SENTINEL)

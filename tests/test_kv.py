@@ -10,6 +10,8 @@ These are the system invariants the engines rely on:
 """
 import numpy as np
 import jax.numpy as jnp
+import pytest
+pytest.importorskip("hypothesis")  # optional dep: skip, don't error
 from hypothesis import given, settings, strategies as st
 
 from repro.core.kv import (KEY_SENTINEL, bucketize, local_reduce,

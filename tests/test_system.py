@@ -10,25 +10,28 @@ import dataclasses
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
 
 from repro.config import ShapeConfig, SINGLE_POD, TrainConfig
 from repro.configs.registry import get_smoke_config
-from repro.core.wordcount import WordCount, wordcount_oracle
+from repro.core import JobConfig, submit
+from repro.core.usecases import WordCount, wordcount_oracle
 from repro.data.corpus import zipf_tokens
 from repro.launch.specs import make_run
 from repro.models.transformer import init_model
 from repro.serve.engine import ServeEngine
 from repro.train.train_step import init_train_state, make_train_step
 
+pytestmark = pytest.mark.slow
+
 
 def test_wordcount_to_training_to_serving():
     # 1) ingest: wordcount over a Zipf stream (P=1 mesh — the engine runs
     #    on any mesh size) builds the id->count table
     raw = zipf_tokens(50_000, vocab=4_096, seed=0)
-    job = WordCount(backend="1s")
-    job.init(raw, vocab=4_096, task_size=2_048, push_cap=1_024, n_procs=1)
-    job.run()
-    counts = job.result_dict()
+    cfg1 = JobConfig(usecase=WordCount(vocab=4_096), backend="1s",
+                     task_size=2_048, push_cap=1_024, n_procs=1)
+    counts = submit(cfg1, raw).result().records
     assert counts == wordcount_oracle(raw, 4_096)
 
     # 2) vocab: keep the top-K words, re-encode the stream (rank ids —
