@@ -41,7 +41,7 @@ import json
 from functools import partial
 import numpy as np, jax
 from jax.sharding import PartitionSpec as P
-from repro.core import JobConfig, submit
+from repro.core import JobConfig, planner, submit
 from repro.core import onesided, twosided
 from repro.core.usecases import WordCount
 from repro.data.corpus import synth_corpus
@@ -55,11 +55,14 @@ out = {{}}
 for backend, mod in (("1s", onesided), ("2s", twosided)):
     h = submit(JobConfig(usecase=WordCount(vocab=VOCAB), backend=backend,
                          task_size=task, push_cap=CAP, n_procs=NP), tokens)
+    # lowering-only: materialize the full resident grid the blocking path
+    # would use (the streamed path never holds this on the host)
+    grid = planner.shard_tasks(tokens, h.plan)
     fn = jax.jit(shard_map(
         partial(mod._engine, h.spec, h._map_fn), mesh=h.mesh,
         in_specs=(P("procs"), P("procs"), P("procs")),
         out_specs=(P("procs"), P("procs"))))
-    compiled = fn.lower(h._tokens, h._task_ids, h._repeats).compile()
+    compiled = fn.lower(grid, h._task_ids, h._repeats).compile()
     ma = compiled.memory_analysis()
     peak = getattr(ma, "peak_memory_in_bytes", None)
     if peak is None:      # jax 0.4.x: approximate peak from components

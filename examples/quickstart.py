@@ -14,7 +14,10 @@ from repro.data.corpus import synth_corpus
 def main():
     tokens = synth_corpus(500_000, vocab=65_536, seed=0)
 
-    # paper Listing 1, redesigned: declare the use-case + backend, submit
+    # paper Listing 1, redesigned: declare the use-case + backend, submit.
+    # A raw array is auto-wrapped in an ArraySource and streamed through
+    # the same SegmentFeed as any DataSource (mmap files, lazy corpora —
+    # see examples/streaming_wordcount.py); nothing is pre-sharded.
     cfg = JobConfig(usecase=WordCount(vocab=65_536), backend="1s",
                     task_size=4_096, push_cap=1_024, n_procs=8)
     result = submit(cfg, tokens).result()

@@ -15,8 +15,10 @@ Works for both the MapReduce engine's window carries and the trainer's
 param/opt state (launch/train.py). For engine jobs, the unified Job API
 is the front door: a segmented ``JobHandle`` calls
 ``handle.checkpoint(manager)`` after each ``step()`` (async snapshot of
-the backend-agnostic EngineCarry) and ``handle.restore(manager)``
-resumes — see tests/test_ckpt_ft.py and benchmarks/fig5_ckpt.py.
+the backend-agnostic EngineCarry; the manifest also records the
+SegmentFeed cursor + task assignment) and ``handle.restore(manager)``
+resumes by *seeking* the feed — no input read is replayed — see
+tests/test_ckpt_ft.py and benchmarks/fig5_ckpt.py.
 """
 from __future__ import annotations
 
@@ -104,6 +106,17 @@ class CheckpointManager:
     def latest_step(self) -> Optional[int]:
         s = self.steps()
         return s[-1] if s else None
+
+    def peek(self, step: Optional[int] = None) -> Tuple[int, Dict]:
+        """Read a snapshot's manifest ``extra`` without touching the
+        arrays — compatibility checks (e.g. the Job API's backend guard)
+        and feed-seek metadata cost no array I/O."""
+        if step is None:
+            step = self.latest_step()
+        assert step is not None, f"no checkpoints in {self.dir}"
+        with open(os.path.join(self.dir, f"step-{step}",
+                               "manifest.json")) as f:
+            return step, json.load(f).get("extra", {})
 
     def restore(self, tree_like: Any, step: Optional[int] = None,
                 shardings: Any = None) -> Tuple[int, Any, Dict]:

@@ -1,18 +1,34 @@
 """The unified job lifecycle: ``submit(config, dataset) -> JobHandle``.
 
 This is the public entry point of the framework. A job is the triple
-(use-case, backend, dataset); the handle exposes the paper's decoupled
-lifecycle instead of one opaque blocking call:
+(use-case, backend, data source); the handle exposes the paper's
+decoupled lifecycle instead of one opaque blocking call:
 
     cfg = JobConfig(usecase=WordCount(vocab=65_536), backend="1s",
                     task_size=4_096, push_cap=1_024, n_procs=8)
     result = submit(cfg, tokens).result()          # oneshot
 
     cfg = dataclasses.replace(cfg, segment=2)      # streaming / ckpt mode
-    handle = submit(cfg, tokens)
+    handle = submit(cfg, MmapTokenSource("corpus.bin"))
     while handle.step():                           # one segment at a time
         handle.checkpoint(manager)                 # async window snapshot
     result = handle.result()
+
+``dataset`` is any :class:`repro.data.source.DataSource` (raw arrays are
+auto-wrapped in an ``ArraySource``). Nothing is pre-sharded on the host:
+a :class:`repro.data.feed.SegmentFeed` reads each segment's tasks by
+``plan.file_offset`` in a background thread and dispatches the device
+transfer while the engine computes the previous segment — the paper's
+non-blocking I/O. Oneshot mode is internally "segmented with one big
+segment", so both engines share the one streaming data path. In
+segmented mode peak host residency is O(segment); oneshot's single
+segment spans the input, so set ``JobConfig(segment=N)`` for datasets
+that must never be fully resident.
+
+A checkpoint snapshot carries the feed cursor and task assignment, so
+``restore`` *seeks* the stream (no read is replayed), and a straggler
+re-plan (``repro.ft.straggler.replan_handle``) re-routes exactly the
+not-yet-read tasks through the same feed.
 
 ``JobResult`` is structured: the records dict, the use-case's finalized
 output, wall time, and per-rank task/work counts (the imbalance stats the
@@ -21,7 +37,7 @@ paper's Fig 4 is about) — not raw key/value arrays.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Dict, Optional
 
 import numpy as np
@@ -30,6 +46,9 @@ from repro.core import planner
 from repro.core.kv import KEY_SENTINEL
 from repro.core.registry import Backend, JobSpec, get_backend
 from repro.core.usecase import UseCase, as_map_fn, finalize
+from repro.core.windows import AXIS
+from repro.data.feed import SegmentFeed
+from repro.data.source import as_source
 
 
 @dataclass(frozen=True)
@@ -65,13 +84,15 @@ class JobResult:
         return float(self.work_per_rank.max() / mean) if mean else 1.0
 
 
-def submit(config: JobConfig, dataset, *, mesh=None,
-           repeats=None) -> "JobHandle":
-    """Plan ``dataset`` (a 1-D int32 token array) onto the mesh and return
-    a handle. Nothing executes until ``step()`` or ``result()``.
+def submit(config: JobConfig, dataset, *, mesh=None, repeats=None,
+           prefetch: bool = True) -> "JobHandle":
+    """Plan ``dataset`` (a DataSource, or a 1-D int32 array auto-wrapped
+    into one) onto the mesh and return a handle. Nothing executes — and
+    nothing beyond one segment is read — until ``step()`` or ``result()``.
 
     ``repeats`` is the optional (n_procs, tasks_per_proc) compute-repeat
-    grid — the paper's footnote-5 imbalance model."""
+    grid — the paper's footnote-5 imbalance model. ``prefetch=False``
+    disables the background read (measurement baselines)."""
     backend = get_backend(config.backend)        # fail fast on bad names
     window = config.window or config.usecase.window
     spec = JobSpec(vocab=window, task_size=config.task_size,
@@ -81,44 +102,49 @@ def submit(config: JobConfig, dataset, *, mesh=None,
     from repro.distributed.mesh import local_mesh
     if mesh is None:
         mesh = local_mesh((config.n_procs,), ("procs",))
-    plan = planner.plan_input(len(dataset), config.task_size,
+    source = as_source(dataset)
+    plan = planner.plan_input(source.len_elements(), config.task_size,
                               config.n_procs)
-    tokens = planner.shard_tasks(np.asarray(dataset, np.int32), plan)
     task_ids = planner.shard_task_ids(plan)
     T = plan.tasks_per_proc
     if repeats is None:
         repeats = np.ones((config.n_procs, T), np.int32)
     repeats = np.asarray(repeats, np.int32).reshape(config.n_procs, T)
-    return JobHandle(config, backend, spec, mesh, plan, tokens, task_ids,
-                     repeats)
+    from jax.sharding import NamedSharding, PartitionSpec
+    feed = SegmentFeed(
+        source, plan, task_ids, repeats,
+        segment=config.segment if config.segment > 0 else max(T, 1),
+        sharding=NamedSharding(mesh, PartitionSpec(AXIS)),
+        prefetch=prefetch)
+    return JobHandle(config, backend, spec, mesh, plan, feed)
 
 
 class JobHandle:
     """Streaming lifecycle of one submitted job.
 
-    * oneshot (``segment == 0``): ``result()`` runs the backend's blocking
-      ``run_job`` once and caches the outcome;
-    * segmented (``segment > 0``): ``step()`` advances one segment through
-      the backend's ``make_segment_fns`` triple; ``checkpoint(manager)``
-      snapshots the window carry asynchronously; ``restore(manager)``
-      resumes from the latest (or a given) snapshot; ``result()`` finishes
-      the remaining segments and the Combine phase.
+    * oneshot (``segment == 0``): ``result()`` streams the whole input as
+      one segment through the backend's segmented path and caches the
+      outcome;
+    * segmented (``segment > 0``): ``step()`` pulls the next prefetched
+      segment from the feed and advances the backend's
+      ``make_segment_fns`` triple; ``checkpoint(manager)`` snapshots the
+      window carry (and feed position) asynchronously; ``restore(manager)``
+      resumes by seeking the feed; ``replan(grid)`` re-routes unread
+      tasks; ``result()`` finishes the remaining segments and the
+      Combine phase.
     """
 
     def __init__(self, config, backend: Backend, spec, mesh, plan,
-                 tokens, task_ids, repeats):
+                 feed: SegmentFeed):
         self.config = config
         self.backend = backend
         self.spec = spec
         self.mesh = mesh
         self.plan = plan
-        self._tokens = tokens          # (P, T, S)
-        self._task_ids = task_ids      # (P, T)
-        self._repeats = repeats        # (P, T)
+        self.feed = feed
         self._map_fn = as_map_fn(config.usecase)
         self._seg_fns = None
         self._carry = None
-        self._cursor = 0               # per-rank task slots completed
         self._wall = 0.0
         self._result: Optional[JobResult] = None
 
@@ -127,7 +153,7 @@ class JobHandle:
     @property
     def cursor(self) -> int:
         """Per-rank task slots completed so far (segmented mode)."""
-        return self._cursor
+        return self.feed.cursor
 
     @property
     def done(self) -> bool:
@@ -137,6 +163,15 @@ class JobHandle:
     def carry(self):
         """The current EngineCarry snapshot reference (segmented mode)."""
         return self._carry
+
+    @property
+    def _task_ids(self) -> np.ndarray:
+        """Full (P, T) task assignment (consumed prefix + upcoming)."""
+        return self.feed.task_ids_grid
+
+    @property
+    def _repeats(self) -> np.ndarray:
+        return self.feed.repeats_grid
 
     def windows(self) -> np.ndarray:
         """Per-rank dense Key-Value windows, host-side (P, window) — the
@@ -157,20 +192,34 @@ class JobHandle:
     def remaining_task_ids(self) -> np.ndarray:
         """Global ids of tasks not yet executed (segmented mode) — what a
         straggler-aware re-plan redistributes."""
-        ids = self._task_ids[:, self._cursor:]
-        return np.sort(ids[ids >= 0])
+        return self.feed.remaining_task_ids()
 
     # -- segmented execution ------------------------------------------------
+
+    def _ensure_engine(self):
+        if self._seg_fns is None:
+            self._seg_fns = self.backend.make_segment_fns(
+                self.spec, self._map_fn, self.mesh)
+            self._carry = self._seg_fns[0]()
 
     def _ensure_segmented(self):
         if self.config.segment <= 0:
             raise RuntimeError(
                 "step()/checkpoint() need a segmented job — set "
                 "JobConfig(segment=N) with N tasks per step")
-        if self._seg_fns is None:
-            self._seg_fns = self.backend.make_segment_fns(
-                self.spec, self._map_fn, self.mesh)
-            self._carry = self._seg_fns[0]()
+        self._ensure_engine()
+
+    def _advance(self, n_segments: int) -> bool:
+        _, seg_fn, _ = self._seg_fns
+        t0 = time.perf_counter()
+        for _ in range(n_segments):
+            seg = self.feed.next_segment()
+            if seg is None:
+                break
+            tokens, task_ids, repeats = seg
+            self._carry = seg_fn(self._carry, tokens, task_ids, repeats)
+        self._wall += time.perf_counter() - t0
+        return not self.feed.exhausted
 
     def step(self, n_segments: int = 1) -> bool:
         """Advance up to ``n_segments`` segments. Returns True while map
@@ -178,76 +227,97 @@ class JobHandle:
         if self._result is not None:
             return False
         self._ensure_segmented()
-        _, seg_fn, _ = self._seg_fns
-        T, seg = self.plan.tasks_per_proc, self.config.segment
-        t0 = time.perf_counter()
-        for _ in range(n_segments):
-            if self._cursor >= T:
-                break
-            s, e = self._cursor, min(self._cursor + seg, T)
-            self._carry = seg_fn(self._carry, self._tokens[:, s:e],
-                                 self._task_ids[:, s:e],
-                                 self._repeats[:, s:e])
-            self._cursor = e
-        self._wall += time.perf_counter() - t0
-        return self._cursor < T
+        return self._advance(n_segments)
+
+    def replan(self, task_id_grid) -> "JobHandle":
+        """Install a re-planned (P, W) assignment of the *unread* tasks
+        (from ``repro.ft.straggler``); each task keeps its compute-repeat
+        factor, so results stay exact by construction."""
+        self._ensure_segmented()
+        grid = np.asarray(task_id_grid, np.int32)
+        by_task = {int(t): int(r) for t, r in
+                   zip(self.feed.task_ids_grid.ravel(),
+                       self.feed.repeats_grid.ravel()) if t >= 0}
+        reps = np.ones_like(grid)
+        for idx in zip(*np.nonzero(grid >= 0)):
+            # unknown ids fall through to the feed's coverage check,
+            # which names the offending tasks
+            reps[idx] = by_task.get(int(grid[idx]), 1)
+        self.feed.replan(grid, reps)
+        return self
 
     def checkpoint(self, manager, **extra):
         """Asynchronously snapshot the window carry into ``manager`` (a
         ``repro.ckpt.CheckpointManager``). The device_get happens in the
         manager's worker thread, overlapping the next segment's compute —
-        the paper's MPI-storage-windows trick."""
+        the paper's MPI-storage-windows trick. The manifest records the
+        feed position and task assignment, so restore can seek."""
         self._ensure_segmented()
         assert self._carry is not None
-        # reserved keys win over caller extras: restore() trusts "cursor"
-        return manager.save_async(self._cursor, self._carry,
-                                  extra={**extra,
-                                         "cursor": self._cursor,
-                                         "backend": self.backend.name})
+        # reserved keys win over caller extras: restore() trusts them
+        return manager.save_async(
+            self.cursor, self._carry,
+            extra={**extra,
+                   "cursor": self.cursor,
+                   "backend": self.backend.name,
+                   "task_ids": self.feed.task_ids_grid.tolist(),
+                   "repeats": self.feed.repeats_grid.tolist()})
 
     def restore(self, manager, step: Optional[int] = None) -> "JobHandle":
         """Resume from a snapshot taken by :meth:`checkpoint` (possibly in
-        a previous process)."""
+        a previous process): install the carry, then *seek* the feed to
+        the saved cursor/assignment — no segment read is ever replayed.
+
+        Raises ``ValueError`` if the snapshot was taken by a different
+        backend (its carry layout would be silently incompatible)."""
         import jax
         self._ensure_segmented()
+        found, extra = manager.peek(step)
+        saved = extra.get("backend")
+        if saved is not None and saved != self.backend.name:
+            raise ValueError(
+                f"checkpoint step {found} "
+                f"was taken by backend {saved!r} — it cannot restore into "
+                f"a {self.backend.name!r} handle; resubmit with "
+                f"JobConfig(backend={saved!r})")
+        # load exactly the snapshot the guard inspected (a concurrent
+        # async save could otherwise re-resolve "latest" to a newer step)
         _, carry, extra = manager.restore(
-            jax.eval_shape(lambda: self._carry), step=step)
+            jax.eval_shape(lambda: self._carry), step=found)
         self._carry = carry
-        self._cursor = int(extra["cursor"])
+        self.feed.seek(int(extra["cursor"]),
+                       task_ids=extra.get("task_ids"),
+                       repeats=extra.get("repeats"))
         return self
 
     def load(self, carry, cursor: int) -> "JobHandle":
         """Install an in-memory carry snapshot (elastic/straggler paths)."""
         self._ensure_segmented()
         self._carry = carry
-        self._cursor = int(cursor)
+        self.feed.seek(int(cursor))
         return self
 
     # -- completion ---------------------------------------------------------
 
     def result(self) -> JobResult:
-        """Run to completion (whatever mode) and return the JobResult."""
+        """Run to completion (whatever mode) and return the JobResult.
+        Oneshot jobs take the same streamed path with one big segment."""
         if self._result is not None:
             return self._result
-        if self.config.segment > 0 or self._carry is not None:
-            while self.step():
-                pass
-            _, _, fin_fn = self._seg_fns
-            t0 = time.perf_counter()
-            keys, vals = fin_fn(self._carry)
-            keys = np.asarray(keys)[0]
-            vals = np.asarray(vals)[0]
-            self._wall += time.perf_counter() - t0
-        else:
-            t0 = time.perf_counter()
-            keys, vals = self.backend.run_job(
-                self.spec, self._map_fn, self.mesh, self._tokens,
-                self._task_ids, self._repeats)
-            self._wall += time.perf_counter() - t0
-            keys, vals = np.asarray(keys), np.asarray(vals)
+        self._ensure_engine()
+        while self._advance(1):
+            pass
+        self.feed.close()                  # stream drained: stop prefetch
+        _, _, fin_fn = self._seg_fns
+        t0 = time.perf_counter()
+        keys, vals = fin_fn(self._carry)
+        keys = np.asarray(keys)[0]
+        vals = np.asarray(vals)[0]
+        self._wall += time.perf_counter() - t0
         valid = keys != int(KEY_SENTINEL)
         records = dict(zip(keys[valid].tolist(), vals[valid].tolist()))
-        task_valid = self._task_ids >= 0
+        ids, reps = self.feed.task_ids_grid, self.feed.repeats_grid
+        task_valid = ids >= 0
         self._result = JobResult(
             records=records,
             output=finalize(self.config.usecase, records),
@@ -256,6 +326,6 @@ class JobHandle:
             backend=self.backend.name,
             n_tasks=self.plan.n_tasks,
             tasks_per_rank=task_valid.sum(axis=1),
-            work_per_rank=(self._repeats * task_valid).sum(axis=1),
+            work_per_rank=(reps * task_valid).sum(axis=1),
         )
         return self._result

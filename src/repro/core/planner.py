@@ -51,19 +51,39 @@ def shard_task_ids(plan: TaskPlan) -> np.ndarray:
     return np.stack([plan.tasks_for_rank(r) for r in range(plan.n_procs)])
 
 
-def shard_tasks(tokens: np.ndarray, plan: TaskPlan):
-    """Host-side: build per-rank (tasks_per_proc, task_size) input blocks +
-    validity mask. Padding tasks are all-sentinel."""
+def read_task(source, plan: TaskPlan, task_id: int) -> np.ndarray:
+    """Read one task's input by file offset — the paper's non-blocking
+    I/O unit. Returns a (task_size,) int32 block, KEY_SENTINEL padded
+    (short reads at EOF, all-sentinel for padding ids < 0)."""
     from repro.core.kv import KEY_SENTINEL
-    n = plan.n_tasks * plan.task_size
-    flat = np.full((n,), int(KEY_SENTINEL), np.int32)
-    flat[: len(tokens)] = tokens
-    grid = flat.reshape(plan.n_tasks, plan.task_size)
-    out = np.full((plan.n_procs, plan.tasks_per_proc, plan.task_size),
-                  int(KEY_SENTINEL), np.int32)
-    for r in range(plan.n_procs):
-        ids = plan.tasks_for_rank(r)
-        for j, t in enumerate(ids):
-            if t >= 0:
-                out[r, j] = grid[t]
+    out = np.full((plan.task_size,), int(KEY_SENTINEL), np.int32)
+    if task_id >= 0:
+        chunk = source.read(plan.file_offset(task_id), plan.task_size)
+        out[: len(chunk)] = chunk
     return out
+
+
+def gather_segment(source, plan: TaskPlan,
+                   task_id_grid: np.ndarray) -> np.ndarray:
+    """Offset-based per-segment shard plan: materialize exactly the
+    (n_procs, n, task_size) token block for one segment's task-id grid —
+    the only host residency the streaming path ever needs. Replaces the
+    whole-input pre-shard for execution."""
+    from repro.core.kv import KEY_SENTINEL
+    ids = np.asarray(task_id_grid)
+    out = np.full(ids.shape + (plan.task_size,), int(KEY_SENTINEL),
+                  np.int32)
+    for r in range(ids.shape[0]):
+        for j in range(ids.shape[1]):
+            if ids[r, j] >= 0:
+                out[r, j] = read_task(source, plan, int(ids[r, j]))
+    return out
+
+
+def shard_tasks(tokens: np.ndarray, plan: TaskPlan):
+    """Host-side: the fully-resident pre-shard — per-rank
+    (tasks_per_proc, task_size) input blocks, padding tasks all-sentinel.
+    Kept for the legacy API shim and resident baselines; the Job API now
+    streams per-segment via :func:`gather_segment` instead."""
+    from repro.data.source import ArraySource
+    return gather_segment(ArraySource(tokens), plan, shard_task_ids(plan))

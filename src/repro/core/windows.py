@@ -24,7 +24,6 @@ path simply leaves the in-flight ``pending_*`` buffers empty).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple
 
 import jax

@@ -1,3 +1,7 @@
 from repro.data.corpus import synth_corpus, zipf_tokens
 from repro.data.tokenizer import HashTokenizer, Vocab
 from repro.data.pipeline import DoubleBufferedLoader, lm_batches
+from repro.data.source import (ArraySource, ConcatSource, DataSource,
+                               MmapTokenSource, ZipfSource, as_source,
+                               read_all)
+from repro.data.feed import FeedStats, SegmentFeed

@@ -7,8 +7,6 @@ token stream — with controllable size, plus the paper's imbalance model
 """
 from __future__ import annotations
 
-from typing import Tuple
-
 import numpy as np
 
 

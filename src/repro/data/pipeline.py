@@ -5,10 +5,16 @@ of the next task's input* (non-blocking MPI I/O). On TPU the same role is
 played by dispatching ``jax.device_put`` for batch t+1 while batch t's step
 is still executing (JAX dispatch is async; the host thread runs ahead).
 ``DoubleBufferedLoader`` keeps exactly one batch in flight.
+
+For MapReduce jobs this pattern is generalized by
+``repro.data.feed.SegmentFeed``, which prefetches engine *segments* from
+any offset-addressable ``repro.data.source.DataSource`` (and owns the
+seek/replan bookkeeping a streaming job needs); this module remains the
+LM-training batch pipeline.
 """
 from __future__ import annotations
 
-from typing import Callable, Iterator, Optional
+from typing import Iterator, Optional
 
 import jax
 import numpy as np

@@ -1,0 +1,184 @@
+"""DataSource — the streaming dataset side of the Job API.
+
+The paper's decoupled strategy pairs one-sided communication with
+*non-blocking I/O*: each process asynchronously retrieves the next Map
+task's input (by file offset) while computing the current one (§2.1).
+That requires the dataset to be addressable by offset, not materialized
+up front — ``submit`` used to demand a fully resident 1-D array, capping
+dataset size at host RAM and making the I/O half of the paper
+structurally impossible.
+
+A :class:`DataSource` is the minimal offset-addressable contract:
+
+  * ``len_elements()``        — total int32 elements in the stream;
+  * ``read(offset, size)``    — up to ``size`` elements starting at
+                                ``offset`` (short reads at EOF). Reads
+                                are pure: any offset may be read at any
+                                time, in any order, from any thread —
+                                which is what lets the prefetcher
+                                (:class:`repro.data.feed.SegmentFeed`)
+                                run ahead and a restored job seek
+                                instead of replaying.
+
+Implementations:
+
+  * :class:`ArraySource`     — resident numpy array (back-compat;
+                               ``submit`` auto-wraps raw arrays);
+  * :class:`MmapTokenSource` — memory-mapped token file: datasets far
+                               larger than host RAM, pages touched only
+                               as tasks read them;
+  * :class:`ZipfSource`      — lazy synthetic PUMA-like corpus,
+                               generated per fixed-size block on read
+                               (offset-deterministic, zero bytes stored);
+  * :class:`ConcatSource`    — concatenation of sources (sharded corpora
+                               on disk presented as one stream).
+"""
+from __future__ import annotations
+
+import os
+from typing import Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+
+@runtime_checkable
+class DataSource(Protocol):
+    """Offset-addressable int32 element stream."""
+
+    def len_elements(self) -> int:
+        ...
+
+    def read(self, offset: int, size: int) -> np.ndarray:
+        """Return elements ``[offset, offset+size)`` as int32; short at
+        EOF, empty past it. Must be pure and thread-safe."""
+        ...
+
+
+def as_source(dataset) -> DataSource:
+    """``submit``'s auto-wrap: pass through a DataSource, wrap anything
+    array-like (list, tuple, np.ndarray) in an :class:`ArraySource`."""
+    if isinstance(dataset, DataSource) and not isinstance(dataset,
+                                                          np.ndarray):
+        return dataset
+    return ArraySource(dataset)
+
+
+def read_all(source: DataSource, block: int = 1 << 20) -> np.ndarray:
+    """Materialize a source (oracle/debug helper — O(dataset) host RAM,
+    exactly what the streaming path avoids)."""
+    n = source.len_elements()
+    out = np.empty((n,), np.int32)
+    filled = 0
+    while filled < n:
+        chunk = source.read(filled, min(block, n - filled))
+        out[filled: filled + len(chunk)] = chunk
+        filled += len(chunk)
+    return out
+
+
+class ArraySource:
+    """A resident in-memory array behind the DataSource contract."""
+
+    def __init__(self, array):
+        self._array = np.asarray(array, np.int32).reshape(-1)
+
+    def len_elements(self) -> int:
+        return len(self._array)
+
+    def read(self, offset: int, size: int) -> np.ndarray:
+        return self._array[offset: offset + size]
+
+
+class MmapTokenSource:
+    """Memory-mapped flat token file — datasets ≫ host RAM.
+
+    The file is raw little-endian tokens of ``dtype`` (default int32,
+    the engines' element type). ``read`` copies just the requested slice
+    out of the map, so peak host residency is O(read), not O(file).
+    """
+
+    def __init__(self, path: str, dtype=np.int32):
+        self.path = path
+        self._dtype = np.dtype(dtype)
+        self._n = os.path.getsize(path) // self._dtype.itemsize
+        self._mm = np.memmap(path, dtype=self._dtype, mode="r",
+                             shape=(self._n,))
+
+    def len_elements(self) -> int:
+        return self._n
+
+    def read(self, offset: int, size: int) -> np.ndarray:
+        return np.asarray(self._mm[offset: offset + size], np.int32)
+
+
+class ZipfSource:
+    """Lazy synthetic Zipf corpus (the PUMA stand-in, repro.data.corpus)
+    generated per-read — an arbitrarily large dataset that stores zero
+    bytes.
+
+    Generation is blocked: element i belongs to block ``i // block``,
+    and each block is produced by its own counter-keyed RNG, so
+    ``read(offset, size)`` is deterministic regardless of read order or
+    segmentation — the property the streamed-equals-resident tests pin.
+    """
+
+    def __init__(self, n: int, vocab: int, a: float = 1.3, seed: int = 0,
+                 block: int = 65536):
+        self.n, self.vocab, self.a, self.seed = n, vocab, a, seed
+        self.block = block
+        self._cache = (-1, None)    # last generated (block, tokens):
+        # sequential task reads hit the same block ~block/task_size times
+
+    def len_elements(self) -> int:
+        return self.n
+
+    def _gen_block(self, b: int) -> np.ndarray:
+        cached_b, cached = self._cache      # atomic tuple read: benign
+        if cached_b == b:                   # regeneration on a race
+            return cached
+        rng = np.random.default_rng([self.seed, b])
+        size = min(self.block, self.n - b * self.block)
+        blk = (rng.zipf(self.a, size=size) % self.vocab).astype(np.int32)
+        self._cache = (b, blk)
+        return blk
+
+    def read(self, offset: int, size: int) -> np.ndarray:
+        end = min(offset + size, self.n)
+        if end <= offset:
+            return np.empty((0,), np.int32)
+        out = np.empty((end - offset,), np.int32)
+        for b in range(offset // self.block, (end - 1) // self.block + 1):
+            blk = self._gen_block(b)
+            lo = max(offset, b * self.block)
+            hi = min(end, b * self.block + len(blk))
+            out[lo - offset: hi - offset] = blk[lo - b * self.block:
+                                                hi - b * self.block]
+        return out
+
+
+class ConcatSource:
+    """Concatenation of sources — e.g. a sharded on-disk corpus
+    (`part-*.bin`) presented as one contiguous stream."""
+
+    def __init__(self, sources: Sequence[DataSource]):
+        self._sources = list(sources)
+        self._starts = np.cumsum([0] + [s.len_elements()
+                                        for s in self._sources])
+
+    def len_elements(self) -> int:
+        return int(self._starts[-1])
+
+    def read(self, offset: int, size: int) -> np.ndarray:
+        end = min(offset + size, self.len_elements())
+        if end <= offset:
+            return np.empty((0,), np.int32)
+        parts = []
+        # first child whose end is past `offset`
+        i = int(np.searchsorted(self._starts[1:], offset, side="right"))
+        while offset < end:
+            lo = offset - int(self._starts[i])
+            take = min(end, int(self._starts[i + 1])) - offset
+            parts.append(self._sources[i].read(lo, take))
+            offset += take
+            i += 1
+        return np.concatenate(parts) if len(parts) > 1 else parts[0]

@@ -25,7 +25,6 @@ work — recorded in DESIGN.md).
 """
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
 from typing import Any, Dict
 

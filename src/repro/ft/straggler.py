@@ -91,3 +91,16 @@ def plan_next_segment(handle, tracker: ThroughputTracker,
     remaining = handle.remaining_task_ids()
     per_seg = tasks_per_segment or len(remaining)
     return rebalance_tasks(remaining.tolist(), tracker.rate, per_seg)
+
+
+def replan_handle(handle, tracker: ThroughputTracker) -> np.ndarray:
+    """Re-route the handle's *unread* tasks through its SegmentFeed,
+    proportional to tracked throughput — the streaming composition of
+    :func:`plan_next_segment`: the feed discards any in-flight prefetch
+    of the old assignment and starts reading the new one (reads are
+    pure, so nothing is double-executed). Each task keeps its
+    compute-repeat factor; exactness is preserved by construction.
+    Returns the installed (n_procs, width) grid."""
+    assignment = plan_next_segment(handle, tracker)
+    handle.replan(assignment)
+    return assignment

@@ -5,7 +5,6 @@ from functools import partial
 import jax
 
 from repro.kernels.moe_dispatch.kernel import bucket_slots_pallas
-from repro.kernels.moe_dispatch.ref import bucket_slots_ref
 
 
 def _on_tpu() -> bool:

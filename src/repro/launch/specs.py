@@ -6,7 +6,6 @@ map each abstract tree onto the mesh via distributed/sharding.py rules.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
 import jax

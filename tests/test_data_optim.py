@@ -1,7 +1,6 @@
 """Data pipeline + optimizer substrate tests."""
 import numpy as np
 import pytest
-import jax
 import jax.numpy as jnp
 pytest.importorskip("hypothesis")  # optional dep: skip, don't error
 from hypothesis import given, settings, strategies as st

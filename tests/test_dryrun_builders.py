@@ -5,7 +5,6 @@ builders lower + compile smoke-sized cells on a (2,2) mesh in a subprocess
 — exercising input_specs, sharding assembly, train/prefill/decode program
 construction and the §Perf variants end to end inside the test suite.
 """
-import pytest
 
 
 def test_builders_compile_all_kinds(devices8):

@@ -1,6 +1,5 @@
 """Pipeline parallelism (GPipe over the pod axis): exact equivalence with
 the non-pipelined loss/grads, and a 2-step PP training run."""
-import pytest
 
 
 def test_gpipe_matches_reference_loss_and_grads(devices8):

@@ -4,7 +4,6 @@ invariance, sharded FSDP train step.
 import dataclasses
 
 import numpy as np
-import pytest
 import jax
 import jax.numpy as jnp
 
