@@ -1,0 +1,134 @@
+"""Bench guard — fail CI when a smoke artifact is malformed or regressed.
+
+Compares a freshly produced benchmark artifact against the committed
+repo-root ``BENCH_*.json`` trajectory file:
+
+  * **schema**: every required key must be present (a benchmark that
+    silently stopped emitting its headline number is a regression even
+    if it exits 0);
+  * **tolerance**: the overhead-style metrics may not be worse than the
+    committed baseline by more than a stated margin. Margins are wide —
+    CI smoke runs are tiny and the runners are noisy — so only a real
+    structural regression (streaming no longer overlapping, the steal
+    machinery ballooning) trips them.
+
+    python -m benchmarks.check_regression fig8 fig9
+    python -m benchmarks.check_regression fig9 --results results
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List
+
+try:
+    from benchmarks.common import REPO
+except ImportError:                      # invoked as a script from benchmarks/
+    from common import REPO
+
+# per-benchmark contract: fresh artifact name, committed baseline name,
+# required keys (dotted paths), and (metric, direction, tolerance) gates.
+# Directions: "min" -> fresh may not drop more than `tol` below baseline;
+# "max" -> fresh may not rise more than `tol` above baseline.
+CHECKS: Dict[str, Dict] = {
+    "fig8": {
+        "fresh": "fig8_io_overlap.json",
+        "baseline": "BENCH_io_overlap.json",
+        "required": ["per_task_size", "worst_overlap_win_pct",
+                     "streamed_within_10pct"],
+        "gates": [
+            # streamed may regress vs resident by at most 25 percentage
+            # points relative to the committed trajectory
+            ("worst_overlap_win_pct", "min", 25.0),
+        ],
+    },
+    "fig9": {
+        "fresh": "fig9_imbalance.json",
+        "baseline": "BENCH_imbalance.json",
+        "required": ["model.rows", "real.per_skew",
+                     "steal_overhead_pct_worst",
+                     "criteria.steal_beats_2s_at_max_skew",
+                     "criteria.oracle_exact"],
+        "gates": [
+            # the steal machinery's real-run overhead over plain 1s may
+            # not balloon past baseline + 30 percentage points
+            ("steal_overhead_pct_worst", "max", 30.0),
+        ],
+        "require_true": ["criteria.steal_beats_2s_at_max_skew",
+                         "criteria.oracle_exact"],
+    },
+}
+
+
+def dig(obj, path: str):
+    for part in path.split("."):
+        if not isinstance(obj, dict) or part not in obj:
+            return None
+        obj = obj[part]
+    return obj
+
+
+def check(name: str, results_dir: str, baseline_dir: str) -> List[str]:
+    spec = CHECKS[name]
+    errors: List[str] = []
+    fresh_path = os.path.join(results_dir, spec["fresh"])
+    base_path = os.path.join(baseline_dir, spec["baseline"])
+    if not os.path.isfile(fresh_path):
+        return [f"{name}: fresh artifact {fresh_path} missing"]
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    for key in spec["required"]:
+        if dig(fresh, key) is None:
+            errors.append(f"{name}: fresh artifact missing key {key!r}")
+    for key in spec.get("require_true", []):
+        if dig(fresh, key) is not True:
+            errors.append(f"{name}: {key} is {dig(fresh, key)!r}, "
+                          "expected true")
+    if not os.path.isfile(base_path):
+        errors.append(f"{name}: committed baseline {base_path} missing")
+        return errors
+    with open(base_path) as f:
+        base = json.load(f)
+    for metric, direction, tol in spec["gates"]:
+        got, ref = dig(fresh, metric), dig(base, metric)
+        if got is None or ref is None:
+            errors.append(f"{name}: gate metric {metric!r} absent "
+                          f"(fresh={got!r}, baseline={ref!r})")
+            continue
+        if direction == "min" and got < ref - tol:
+            errors.append(
+                f"{name}: {metric} regressed: {got:.2f} < "
+                f"baseline {ref:.2f} - tolerance {tol}")
+        if direction == "max" and got > ref + tol:
+            errors.append(
+                f"{name}: {metric} regressed: {got:.2f} > "
+                f"baseline {ref:.2f} + tolerance {tol}")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("benchmarks", nargs="+", choices=sorted(CHECKS),
+                    help="which artifacts to guard")
+    ap.add_argument("--results", default=os.path.join(REPO, "results"),
+                    help="directory holding the fresh artifacts")
+    ap.add_argument("--baseline", default=REPO,
+                    help="directory holding the committed BENCH_*.json "
+                         "baselines (default: the repo root — smoke runs "
+                         "never overwrite those)")
+    args = ap.parse_args(argv)
+    failures: List[str] = []
+    for name in args.benchmarks:
+        errs = check(name, args.results, args.baseline)
+        for e in errs:
+            print(f"FAIL {e}")
+        if not errs:
+            print(f"ok   {name}: schema + tolerances hold")
+        failures.extend(errs)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

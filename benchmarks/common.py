@@ -198,6 +198,11 @@ class Costs:
     t_io: float = 0.0        # input retrieval per task (paper: dominates);
                              #   prefetched → overlaps compute in BOTH
                              #   engines, so it adds as max(io, compute)
+    t_fetch: float = 0.0     # 1s+steal only: the per-step task-fetch
+                             #   all_to_all (a claimed task's input is
+                             #   served by global id before map can run,
+                             #   so it sits ON the critical path — the
+                             #   steal scheduler's honest overhead)
 
     def task_time(self, rep: np.ndarray) -> np.ndarray:
         comp = self.t_task1 + self.t_task_per_rep * np.maximum(rep - 1, 0)
@@ -275,15 +280,25 @@ def simulate(costs: Costs, repeats: np.ndarray, backend: str,
         round_(costs.t_fold * T, "reduce", np.full(P, costs.t_fold * T))
         round_(costs.t_merge * n_levels, "combine",
                np.full(P, costs.t_merge * n_levels))
-    elif backend == "1s":
+    elif backend in ("1s", "1s+steal"):
         # chunked push: fold of chunk k-1 overlaps the push of chunk k;
         # the a2a itself overlaps next round's compute when async — but
-        # pays its latency every round (1S's downside on small tasks)
+        # pays its latency every round (1S's downside on small tasks).
+        # With stealing, the per-step schedule is the one the claim
+        # function actually realizes (heavy tasks migrate to ranks that
+        # ran ahead, packing them into the same lockstep rounds), and
+        # every round additionally pays the task-fetch a2a up front.
+        if backend == "1s+steal":
+            from repro.core.steal import steal_schedule
+            ids = np.arange(repeats.size, dtype=np.int32).reshape(P, T)
+            mt = costs.task_time(steal_schedule(ids, repeats).exec_reps)
         for k in range(T):
             busy = mt[:, k] + costs.t_fold
             comp = busy.max()
             dur = max(comp, costs.t_a2a_chunk) if costs.comm_overlap \
                 else comp + costs.t_a2a_chunk
+            if backend == "1s+steal":
+                dur += costs.t_fetch
             round_(dur, "map+reduce", busy)
         round_(costs.t_fold, "drain", np.full(P, costs.t_fold))
         round_(costs.t_merge * n_levels, "combine",

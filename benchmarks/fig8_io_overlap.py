@@ -109,14 +109,19 @@ def run(quick: bool = False, smoke: bool = False) -> Dict:
         rec = measure(task_sizes=[1024, 4096, 16384], n_tokens=4_000_000,
                       segment=2)
     path = save_json("fig8_io_overlap.json", rec)
-    root = os.path.join(REPO, "BENCH_io_overlap.json")
-    with open(root, "w") as f:
-        json.dump(rec, f, indent=1)
+    wrote = [path]
+    if not smoke:
+        # only full/quick runs refresh the committed trajectory baseline
+        # — a CI-scale smoke run must never clobber it
+        root = os.path.join(REPO, "BENCH_io_overlap.json")
+        with open(root, "w") as f:
+            json.dump(rec, f, indent=1)
+        wrote.append(root)
     print(json.dumps(rec["per_task_size"], indent=1))
     print(f"worst overlap win: {rec['worst_overlap_win_pct']:+.1f}% "
           f"(streamed within 10% of resident: "
           f"{rec['streamed_within_10pct']})")
-    print(f"wrote {path} and {root}")
+    print("wrote " + " and ".join(wrote))
     return rec
 
 

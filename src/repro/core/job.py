@@ -62,6 +62,9 @@ class JobConfig:
     segment: int = 0          # 0 -> oneshot; >0 -> tasks per step()
     window: int = 0           # 0 -> usecase.window
     combine_capacity: int = 0
+    stealing: bool = False    # device-side work stealing inside the engine
+                              #   scan (core/steal.py) — fine-grained
+                              #   rebalancing under the host re-planner
 
 
 @dataclass(frozen=True)
@@ -74,8 +77,17 @@ class JobResult:
     wall_time: float          # seconds spent executing (incl. compile)
     backend: str
     n_tasks: int
-    tasks_per_rank: np.ndarray   # real (non-padding) tasks per rank
-    work_per_rank: np.ndarray    # sum of compute-repeats per rank
+    tasks_per_rank: np.ndarray   # real (non-padding) tasks *assigned* per rank
+    work_per_rank: np.ndarray    # compute-repeats *executed* per rank (with
+                                 #   stealing this is the engine's progress
+                                 #   row; otherwise it equals the assignment)
+    steals_per_rank: np.ndarray  # tasks each rank executed for a peer
+                                 #   (all-zero unless stealing was on)
+
+    @property
+    def n_steals(self) -> int:
+        """Total tasks executed by a rank other than their assignee."""
+        return int(self.steals_per_rank.sum())
 
     @property
     def imbalance(self) -> float:
@@ -94,11 +106,16 @@ def submit(config: JobConfig, dataset, *, mesh=None, repeats=None,
     grid — the paper's footnote-5 imbalance model. ``prefetch=False``
     disables the background read (measurement baselines)."""
     backend = get_backend(config.backend)        # fail fast on bad names
+    if config.stealing and not getattr(backend, "supports_stealing", False):
+        raise ValueError(
+            f"backend {config.backend!r} does not implement device-side "
+            "work stealing (no supports_stealing attribute) — drop "
+            "stealing=True or use backend '1s'")
     window = config.window or config.usecase.window
     spec = JobSpec(vocab=window, task_size=config.task_size,
                    push_cap=config.push_cap, n_procs=config.n_procs,
                    combine_capacity=config.combine_capacity,
-                   segment=config.segment)
+                   segment=config.segment, stealing=config.stealing)
     from repro.distributed.mesh import local_mesh
     if mesh is None:
         mesh = local_mesh((config.n_procs,), ("procs",))
@@ -260,6 +277,7 @@ class JobHandle:
             extra={**extra,
                    "cursor": self.cursor,
                    "backend": self.backend.name,
+                   "stealing": self.config.stealing,
                    "task_ids": self.feed.task_ids_grid.tolist(),
                    "repeats": self.feed.repeats_grid.tolist()})
 
@@ -280,6 +298,15 @@ class JobHandle:
                 f"was taken by backend {saved!r} — it cannot restore into "
                 f"a {self.backend.name!r} handle; resubmit with "
                 f"JobConfig(backend={saved!r})")
+        saved_steal = extra.get("stealing")
+        if (saved_steal is not None
+                and bool(saved_steal) != self.config.stealing):
+            raise ValueError(
+                f"checkpoint step {found} was taken with "
+                f"stealing={bool(saved_steal)} — restoring into a "
+                f"stealing={self.config.stealing} handle would corrupt "
+                "the carry's progress/steal accounting; resubmit with "
+                f"JobConfig(stealing={bool(saved_steal)})")
         # load exactly the snapshot the guard inspected (a concurrent
         # async save could otherwise re-resolve "latest" to a newer step)
         _, carry, extra = manager.restore(
@@ -318,6 +345,14 @@ class JobHandle:
         records = dict(zip(keys[valid].tolist(), vals[valid].tolist()))
         ids, reps = self.feed.task_ids_grid, self.feed.repeats_grid
         task_valid = ids >= 0
+        if self.config.stealing:
+            # executed distribution from the engine's psum-maintained
+            # progress rows (replicated: every shard holds the same row)
+            work = np.asarray(self._carry.work)[0]
+            steals = np.asarray(self._carry.stolen)[0]
+        else:
+            work = (reps * task_valid).sum(axis=1)
+            steals = np.zeros((self.config.n_procs,), np.int32)
         self._result = JobResult(
             records=records,
             output=finalize(self.config.usecase, records),
@@ -326,6 +361,7 @@ class JobHandle:
             backend=self.backend.name,
             n_tasks=self.plan.n_tasks,
             tasks_per_rank=task_valid.sum(axis=1),
-            work_per_rank=(reps * task_valid).sum(axis=1),
+            work_per_rank=work,
+            steals_per_rank=steals,
         )
         return self._result

@@ -59,8 +59,8 @@ def _step(spec: JobSpec, map_fn: Callable, carry: EngineCarry, xs):
                                       carry.pending_v.reshape(-1))
     # ownership transfer for overflowed records: keep them locally
     win = win.put(ofk, ofv)
-    return EngineCarry(win.table, rk, rv, carry.status,
-                       carry.cursor + 1), counts
+    return carry._replace(table=win.table, pending_k=rk, pending_v=rv,
+                          cursor=carry.cursor + 1), counts
 
 
 def _drain(carry: EngineCarry) -> EngineCarry:
@@ -68,13 +68,67 @@ def _drain(carry: EngineCarry) -> EngineCarry:
     win = DenseWindow(carry.table).put(carry.pending_k.reshape(-1),
                                       carry.pending_v.reshape(-1))
     P, cap = carry.pending_k.shape
-    return EngineCarry(
-        win.table,
-        jnp.full((P, cap), KEY_SENTINEL, jnp.int32),
-        jnp.zeros((P, cap), jnp.int32),
-        jnp.int32(STATUS_REDUCE),
-        carry.cursor,
+    return carry._replace(
+        table=win.table,
+        pending_k=jnp.full((P, cap), KEY_SENTINEL, jnp.int32),
+        pending_v=jnp.zeros((P, cap), jnp.int32),
+        status=jnp.int32(STATUS_REDUCE),
     )
+
+
+def _steal_segment(spec: JobSpec, map_fn: Callable, carry: EngineCarry,
+                   tok, tid, rep) -> EngineCarry:
+    """Advance one segment with device-side work stealing (core/steal.py).
+
+    Per scan step: (1) every rank runs the pure claim function over the
+    shared cursor state, so all ranks agree on who executes which task
+    slot; (2) each claimed task is *fetched by global task id* from the
+    rank that holds its input — a fixed-shape ``[tokens | id | repeat]``
+    all_to_all, the one-sided "get" mirroring the push shuffle; (3) the
+    executed repeat lands in the carry's psum-maintained progress row,
+    which is exactly the state the next step's claims read.
+    """
+    from repro.core import steal
+    P, S = spec.n_procs, spec.task_size
+    me = lax.axis_index(AXIS)
+    # deques address dense [0, count) ranges: real columns first
+    perm = steal.compact_columns(tid)
+    tok, tid, rep = tok[perm], tid[perm], rep[perm]
+    head, tail = steal.segment_cursors(tid, AXIS)
+    onehot = jnp.arange(P) == me
+
+    def step(state, _):
+        carry, head, tail = state
+        src_rank, src_col, head, tail = steal.claim_step(head, tail,
+                                                         carry.work)
+        # serve: the rank owning each claimed slot ships that task's
+        # input + (global id, repeat) to its executor
+        mine = src_rank == me
+        cols = jnp.where(mine, src_col, 0)
+        served = jnp.concatenate(
+            [jnp.where(mine[:, None], tok[cols], KEY_SENTINEL),
+             jnp.where(mine[:, None],
+                       jnp.stack([tid[cols], rep[cols]], axis=1),
+                       jnp.asarray([-1, 0], jnp.int32))], axis=1)
+        got = all_to_all_blocks(served, AXIS)
+        src = src_rank[me]
+        row = got[jnp.maximum(src, 0)]
+        live = src >= 0
+        task = jnp.where(live, row[:S], KEY_SENTINEL)
+        t_id = jnp.where(live, row[S], -1)
+        t_rep = jnp.where(live, row[S + 1], 0)
+        carry = carry._replace(
+            work=carry.work + lax.psum(
+                jnp.where(onehot & live, t_rep, 0), AXIS),
+            stolen=carry.stolen + lax.psum(
+                jnp.where(onehot & live & (src != me), 1, 0), AXIS))
+        carry, _ = _step(spec, map_fn, carry,
+                         (task, t_id, jnp.maximum(t_rep, 1)))
+        return (carry, head, tail), None
+
+    (carry, _, _), _ = lax.scan(step, (carry, head, tail), None,
+                                length=tok.shape[0])
+    return carry
 
 
 def _shard_spec():
@@ -86,8 +140,12 @@ def _engine(spec: JobSpec, map_fn: Callable, tokens, task_ids, repeats):
     """Per-shard engine body. tokens: (1, T, S); task_ids/repeats: (1, T)."""
     tokens, task_ids, repeats = tokens[0], task_ids[0], repeats[0]
     carry = init_carry(spec)
-    carry, _ = lax.scan(partial(_step, spec, map_fn), carry,
-                        (tokens, task_ids, repeats))
+    if spec.stealing:
+        carry = _steal_segment(spec, map_fn, carry, tokens, task_ids,
+                               repeats)
+    else:
+        carry, _ = lax.scan(partial(_step, spec, map_fn), carry,
+                            (tokens, task_ids, repeats))
     carry = _drain(carry)
     # Combine (phase IV): sorted merge tree
     keys, vals = combine_records(carry.table, spec)
@@ -98,6 +156,10 @@ def _engine(spec: JobSpec, map_fn: Callable, tokens, task_ids, repeats):
 @register_backend("1s")
 class OneSidedBackend:
     """The decoupled engine behind the ``Backend`` protocol."""
+
+    # the engine honors JobSpec.stealing (device-side work stealing,
+    # core/steal.py); submit() refuses the flag on backends without this
+    supports_stealing = True
 
     def __init__(self):
         self._programs: dict = {}
@@ -127,10 +189,13 @@ class OneSidedBackend:
                         lambda: self._build_segment_fns(spec, map_fn, mesh))
 
     def _build_segment_fns(self, spec: JobSpec, map_fn: Callable, mesh):
-        def seg(carry, tok, tid, rep):
-            carry, _ = lax.scan(partial(_step, spec, map_fn), carry,
-                                (tok, tid, rep))
-            return carry
+        if spec.stealing:
+            seg = partial(_steal_segment, spec, map_fn)
+        else:
+            def seg(carry, tok, tid, rep):
+                carry, _ = lax.scan(partial(_step, spec, map_fn), carry,
+                                    (tok, tid, rep))
+                return carry
 
         def fin(carry):
             carry = _drain(carry)

@@ -63,21 +63,30 @@ def read_task(source, plan: TaskPlan, task_id: int) -> np.ndarray:
     return out
 
 
+def read_tasks(source, plan: TaskPlan, task_ids: np.ndarray) -> np.ndarray:
+    """Vectorized :func:`read_task`: an arbitrary array of *global* task
+    ids (any shape, -1 for padding) becomes a token block of matching
+    leading shape. Addressing by global id — never by assignment slot —
+    is what lets a work-stealing rank read a task originally assigned to
+    a different rank (and lets the tests cross-check the engine's
+    steal fetch against the source of truth)."""
+    from repro.core.kv import KEY_SENTINEL
+    ids = np.asarray(task_ids)
+    out = np.full(ids.shape + (plan.task_size,), int(KEY_SENTINEL),
+                  np.int32)
+    for idx in np.ndindex(*ids.shape):
+        if ids[idx] >= 0:
+            out[idx] = read_task(source, plan, int(ids[idx]))
+    return out
+
+
 def gather_segment(source, plan: TaskPlan,
                    task_id_grid: np.ndarray) -> np.ndarray:
     """Offset-based per-segment shard plan: materialize exactly the
     (n_procs, n, task_size) token block for one segment's task-id grid —
     the only host residency the streaming path ever needs. Replaces the
     whole-input pre-shard for execution."""
-    from repro.core.kv import KEY_SENTINEL
-    ids = np.asarray(task_id_grid)
-    out = np.full(ids.shape + (plan.task_size,), int(KEY_SENTINEL),
-                  np.int32)
-    for r in range(ids.shape[0]):
-        for j in range(ids.shape[1]):
-            if ids[r, j] >= 0:
-                out[r, j] = read_task(source, plan, int(ids[r, j]))
-    return out
+    return read_tasks(source, plan, task_id_grid)
 
 
 def shard_tasks(tokens: np.ndarray, plan: TaskPlan):

@@ -42,6 +42,9 @@ class JobSpec:
     n_procs: int
     combine_capacity: int = 0    # 0 -> vocab
     segment: int = 0             # checkpoint segment (tasks between syncs)
+    stealing: bool = False       # device-side work stealing (core/steal.py);
+                                 #   only engines advertising
+                                 #   ``supports_stealing`` honor it
 
     def __post_init__(self):
         if not self.combine_capacity:

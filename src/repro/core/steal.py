@@ -1,0 +1,206 @@
+"""Device-side work stealing for the decoupled 1S engine.
+
+The paper's claim is that decoupling pays off when "the workload per
+process is unexpectedly unbalanced"; OS4M (arXiv:1406.3901) locates the
+win at *operation*-level scheduling. Host re-planning at segment
+boundaries (``repro.ft.straggler``) is too coarse for that — a slow rank
+still gates every segment. This module moves rebalancing inside the
+engine scan:
+
+  * every scan step, each rank's executed work lands in a **progress
+    row** of :class:`~repro.core.windows.EngineCarry` (``carry.work``),
+    maintained with a one-hot ``psum`` — the one-sided-window analogue
+    of publishing a cursor that every peer can read;
+  * a **pure claim function** (:func:`claim_step`) maps that shared
+    cursor state to this step's task assignment: ranks that ran ahead
+    (least cumulative work) claim tasks from the *tail* of the most
+    loaded rank's unstarted range;
+  * because the claim is a deterministic function of replicated state,
+    every rank computes the identical assignment — each task slot is
+    popped from exactly one deque exactly once, so **exactly-once
+    semantics hold with no dedup machinery** (same argument as the
+    host re-planner, one level down).
+
+The engine (:mod:`repro.core.onesided`) serves a claimed task to its
+executor by global task id through one extra fixed-shape
+``all_to_all`` per step — the one-sided "get" mirroring the push
+shuffle. Results are exact regardless of who executes a task: records
+are bucketized by key ownership and the Combine tree dup-sums across
+every rank's window, so execution locality never changes the output.
+
+:func:`steal_schedule` replays the same claim function on the host over
+a full assignment grid — the property tests pin exactly-once on random
+cursor states with it, and ``benchmarks/fig9_imbalance.py`` feeds the
+realized schedule into the calibrated lockstep model.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import lru_cache, partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+# Work-unit hysteresis: a rank only claims a peer's task when the peer's
+# cumulative work exceeds its own by at least this margin. One unit ==
+# one compute-repeat. Strictly uniform task costs therefore never
+# trigger a steal; per-task jitter above the margin causes some benign
+# churn — harmless, because a steal only re-routes rows inside the
+# task-fetch all_to_all the steal engine ships every step anyway, and
+# results are locality-independent.
+STEAL_MARGIN = 1
+
+
+def claim_step(head: jnp.ndarray, tail: jnp.ndarray, work: jnp.ndarray,
+               margin: int = STEAL_MARGIN) -> Tuple[jnp.ndarray, ...]:
+    """One scheduling round of the work-stealing claim.
+
+    ``head``/``tail`` are the per-rank cursors into each rank's own
+    unstarted column range ``[head[v], tail[v])`` (replicated: every
+    rank holds the identical (P,) rows); ``work`` is the psum-maintained
+    cumulative-work progress row. Executors are processed
+    fastest-first (least work, ties by rank id); each either
+
+      * pops its **own head** (the default, keeping the self-scheduled
+        order), or
+      * **steals the tail** of the most-loaded rank still holding
+        unstarted tasks — when it has fallen ``margin`` work units
+        behind that victim, or when its own range is empty, or
+      * idles (src ``-1``) when every deque is empty.
+
+    Returns ``(src_rank, src_col, head, tail)``: executor ``e`` runs the
+    task at column ``src_col[e]`` of rank ``src_rank[e]``'s grid row.
+    Pure and deterministic — identical on every rank for identical
+    inputs, which is what makes the claims exactly-once with no dedup.
+    """
+    head, tail, work = (jnp.asarray(x, jnp.int32)
+                        for x in (head, tail, work))
+    P = head.shape[0]
+    order = jnp.lexsort((jnp.arange(P), work))          # fastest first
+
+    def assign(i, st):
+        head, tail, src_r, src_c = st
+        e = order[i]
+        rem = tail - head
+        # victim: max cumulative work among ranks with unstarted tasks
+        v = jnp.argmax(jnp.where(rem > 0, work, -1))
+        own = rem[e] > 0
+        victim_ok = (rem[v] > 0) & (v != e)
+        behind = work[v] - work[e] >= margin
+        steal = victim_ok & (behind | ~own)
+        take_own = own & ~steal
+        src_r = src_r.at[e].set(
+            jnp.where(take_own, e, jnp.where(steal, v, -1)).astype(jnp.int32))
+        src_c = src_c.at[e].set(
+            jnp.where(take_own, head[e],
+                      jnp.where(steal, tail[v] - 1, -1)).astype(jnp.int32))
+        head = head.at[e].add(take_own.astype(head.dtype))
+        tail = tail.at[jnp.where(steal, v, e)].add(
+            -steal.astype(tail.dtype))
+        return head, tail, src_r, src_c
+
+    idle = jnp.full((P,), -1, jnp.int32)
+    head, tail, src_rank, src_col = lax.fori_loop(
+        0, P, assign, (head, tail, idle, idle))
+    return src_rank, src_col, head, tail
+
+
+def segment_cursors(task_ids: jnp.ndarray, axis: Optional[str] = None):
+    """Initial (head, tail) rows for one segment grid.
+
+    ``tail`` counts each rank's *real* columns (padding id ``-1`` is
+    excluded from the deques — a fast rank steals work instead of
+    running a no-op). On device, pass ``axis`` to build the replicated
+    row from each rank's local count via the one-hot psum; on host,
+    pass the full (P, n) grid with ``axis=None``.
+    """
+    if axis is None:
+        ids = jnp.asarray(task_ids)
+        tail = (ids >= 0).sum(axis=1).astype(jnp.int32)
+        return jnp.zeros_like(tail), tail
+    me = lax.axis_index(axis)
+    P = lax.psum(1, axis)
+    count = (jnp.asarray(task_ids) >= 0).sum().astype(jnp.int32)
+    tail = lax.psum(jnp.where(jnp.arange(P) == me, count, 0), axis)
+    return jnp.zeros_like(tail), tail
+
+
+def compact_columns(task_ids: jnp.ndarray):
+    """Permutation putting a grid row's real columns before its padding
+    (``claim_step`` addresses each deque as a dense ``[0, count)``
+    range). Stable, so the self-scheduled order is preserved."""
+    return jnp.argsort(jnp.asarray(task_ids) < 0)
+
+
+# ---------------------------------------------------------------------------
+# host replay — the same claim function, driven over a whole grid
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class StealSchedule:
+    """The realized execution schedule of one segment under stealing."""
+    src_rank: np.ndarray     # (P, n) rank whose slot step k executed (-1 idle)
+    src_col: np.ndarray      # (P, n) column within the source rank's row
+    exec_ids: np.ndarray     # (P, n) global task id executed (-1 idle)
+    exec_reps: np.ndarray    # (P, n) compute-repeats executed (0 idle)
+    work: np.ndarray         # (P,) final cumulative work row
+    stolen: np.ndarray       # (P,) tasks each rank executed for a peer
+
+    @property
+    def n_stolen(self) -> int:
+        return int(self.stolen.sum())
+
+
+@lru_cache(maxsize=None)
+def _jitted_claim(margin: int):
+    """One compiled claim program per margin, shared by every
+    steal_schedule call (the jit cache is keyed on the callable, so a
+    fresh partial per call would re-trace every time)."""
+    return jax.jit(partial(claim_step, margin=margin))
+
+
+def steal_schedule(task_ids: np.ndarray, repeats: np.ndarray,
+                   margin: int = STEAL_MARGIN,
+                   work0: Optional[np.ndarray] = None) -> StealSchedule:
+    """Replay :func:`claim_step` over one (P, n) assignment grid.
+
+    This is bit-identical to the schedule the device scan realizes (it
+    is the same jitted claim function, fed the same replicated state),
+    which is what lets the benchmark model a steal run's makespan and
+    the tests check exactly-once without touching the engine.
+    ``work0`` seeds the progress row (cumulative across segments).
+    """
+    ids = np.asarray(task_ids, np.int32)
+    reps = np.asarray(repeats, np.int32)
+    assert ids.shape == reps.shape
+    P, n = ids.shape
+    # per-rank compaction: real columns first, as the engine sees them
+    perm = np.argsort(ids < 0, axis=1, kind="stable")
+    cids = np.take_along_axis(ids, perm, axis=1)
+    creps = np.take_along_axis(reps, perm, axis=1)
+    head = np.zeros((P,), np.int32)
+    tail = (ids >= 0).sum(axis=1).astype(np.int32)
+    work = (np.zeros((P,), np.int32) if work0 is None
+            else np.asarray(work0, np.int32).copy())
+    step = _jitted_claim(margin)
+    src_rank = np.full((P, n), -1, np.int32)
+    src_col = np.full((P, n), -1, np.int32)
+    exec_ids = np.full((P, n), -1, np.int32)
+    exec_reps = np.zeros((P, n), np.int32)
+    stolen = np.zeros((P,), np.int32)
+    for k in range(n):
+        sr, sc, h, t = (np.asarray(x) for x in step(
+            jnp.asarray(head), jnp.asarray(tail), jnp.asarray(work)))
+        head, tail = h.astype(np.int32), t.astype(np.int32)
+        live = sr >= 0
+        src_rank[:, k], src_col[:, k] = sr, sc
+        exec_ids[live, k] = cids[sr[live], sc[live]]
+        exec_reps[live, k] = creps[sr[live], sc[live]]
+        work = work + exec_reps[:, k]
+        stolen += (live & (sr != np.arange(P))
+                   & (exec_ids[:, k] >= 0)).astype(np.int32)
+    return StealSchedule(src_rank, src_col, exec_ids, exec_reps,
+                         work, stolen)

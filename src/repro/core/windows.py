@@ -95,6 +95,13 @@ class EngineCarry(NamedTuple):
     pending_v: jnp.ndarray
     status: jnp.ndarray      # scalar per process (STATUS_*)
     cursor: jnp.ndarray      # tasks completed (restart point)
+    # work-stealing claim state (core/steal.py): psum-maintained progress
+    # rows, replicated on every rank. ``work`` is cumulative executed
+    # compute-repeats per rank; ``stolen`` counts tasks a rank executed
+    # for a peer. Engines without stealing leave both at zero; the rows
+    # ride the carry so checkpoints capture mid-job claim state for free.
+    work: jnp.ndarray        # (P,) int32 progress row
+    stolen: jnp.ndarray      # (P,) int32 steal counters
 
 
 def init_carry(spec) -> EngineCarry:
@@ -106,6 +113,8 @@ def init_carry(spec) -> EngineCarry:
         pending_v=jnp.zeros((P, cap), jnp.int32),
         status=jnp.int32(STATUS_MAP),
         cursor=jnp.int32(0),
+        work=jnp.zeros((P,), jnp.int32),
+        stolen=jnp.zeros((P,), jnp.int32),
     ), AXIS)
 
 
@@ -133,7 +142,7 @@ def wrap_segment_fns(mesh, spec, seg_body, fin_body):
 
     from repro.distributed.collectives import shard_map
     spec_p = P(AXIS)
-    carry_specs = EngineCarry(*([spec_p] * 5))
+    carry_specs = EngineCarry(*([spec_p] * len(EngineCarry._fields)))
 
     def init():
         c = init_carry(spec)

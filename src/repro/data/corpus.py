@@ -47,6 +47,34 @@ def imbalance_repeats(n_procs: int, tasks_per_proc: int, *,
     raise ValueError(mode)
 
 
+def zipf_skew_repeats(n_procs: int, tasks_per_proc: int, s: float, *,
+                      mean_rep: int = 4, seed: int = 0) -> np.ndarray:
+    """Key-distribution-skew workload (Fan et al., arXiv:1401.0355): a
+    compute budget of roughly ``n_procs * tasks_per_proc * mean_rep``
+    repeat units concentrated over ranks by a Zipf law with exponent
+    ``s`` — the hash-partitioned analogue of hot keys landing on few
+    owners.
+
+    ``s=0`` is balanced up to jitter; growing ``s`` piles the work onto
+    ever fewer ranks (every task of a hot rank is hot — partitioning
+    skew follows the *rank*). A deterministic per-task jitter of 0 or
+    +1 repeat keeps tasks within a rank from being bit-identical (note
+    it sits at the steal engine's hysteresis margin, so ``s=0`` still
+    sees benign steal churn), and the ``>= 1`` floor per task inflates
+    the nominal budget somewhat at high ``s`` — treat the budget as
+    approximate, not exact, across ``s``.
+    """
+    assert s >= 0.0
+    weights = (np.arange(1, n_procs + 1, dtype=np.float64)) ** (-s)
+    weights /= weights.sum()
+    budget = float(n_procs * tasks_per_proc * mean_rep)
+    per_rank = np.maximum(1.0, budget * weights / tasks_per_proc)
+    rng = np.random.default_rng(seed)
+    jitter = rng.integers(0, 2, size=(n_procs, tasks_per_proc))
+    reps = np.round(per_rank[:, None]).astype(np.int64) + jitter
+    return np.maximum(reps, 1).astype(np.int32)
+
+
 def lm_token_stream(n_tokens: int, vocab: int, seed: int = 0) -> np.ndarray:
     """Token stream for LM training examples (markov-flavoured Zipf so the
     model has something learnable)."""

@@ -114,6 +114,18 @@ class SegmentFeed:
         ids = self._ids[:, self._cursor:]
         return np.sort(ids[ids >= 0])
 
+    def read_tasks(self, task_ids) -> np.ndarray:
+        """Serve arbitrary tasks by *global id*, independent of the
+        assignment grids or cursor — the host-side twin of the engine's
+        steal fetch. Reads are pure, so serving a task to a rank other
+        than its original assignee replays nothing and disturbs no
+        stream position; the bytes still count into ``stats``."""
+        from repro.core.planner import read_tasks
+        tokens = read_tasks(self.source, self.plan, task_ids)
+        with self._stats_lock:
+            self.stats.bytes_read += tokens.nbytes
+        return tokens
+
     # -- segment construction ----------------------------------------------
 
     def _build(self, start: int, gen: int):

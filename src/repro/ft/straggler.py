@@ -1,17 +1,27 @@
 """Straggler mitigation: throughput-aware task re-planning.
 
-The 1S engine itself is the first line of defense (a slow rank's reduce
-work spreads across the map timeline instead of gating a barrier). This
-module adds the second line: the host tracks per-rank segment throughput
-and re-plans the *remaining* tasks proportionally at every segment
-boundary. Re-planning (not re-issuing in-flight work) keeps exactly-once
-semantics — no dedup machinery needed, results stay exact.
+The imbalance defenses now form three layers, finest to coarsest:
+
+  1. the 1S engine itself — a slow rank's reduce work spreads across the
+     map timeline instead of gating a barrier;
+  2. **in-scan work stealing** (``JobConfig(stealing=True)``,
+     :mod:`repro.core.steal`) — every scan step, ranks that ran ahead
+     claim tasks from the most loaded rank's unstarted range, absorbing
+     per-task skew the host can never see in time;
+  3. this module — the *coarse outer loop*: the host tracks per-rank
+     segment throughput and re-plans the **remaining** tasks
+     proportionally at segment boundaries. Re-planning (not re-issuing
+     in-flight work) keeps exactly-once semantics — no dedup machinery
+     needed, results stay exact.
 
 With the unified Job API the natural integration point is a segmented
 ``JobHandle``: call :func:`plan_next_segment` between ``handle.step()``
 calls to redistribute ``handle.remaining_task_ids()``, and seed the
 tracker from a completed job's per-rank work stats via
-:func:`tracker_from_result`.
+:func:`tracker_from_result`. When the handle also runs with stealing,
+use :func:`outer_rebalance` instead of :func:`replan_handle`: it only
+re-plans on *persistent* drift (a genuinely slow host, a shrunk rank),
+leaving transient skew to the in-scan layer.
 """
 from __future__ import annotations
 
@@ -104,3 +114,24 @@ def replan_handle(handle, tracker: ThroughputTracker) -> np.ndarray:
     assignment = plan_next_segment(handle, tracker)
     handle.replan(assignment)
     return assignment
+
+
+def outer_rebalance(handle, tracker: ThroughputTracker,
+                    drift_threshold: float = 0.0):
+    """Coarse outer loop over the fine-grained in-scan stealing.
+
+    Re-plans the handle's unread tasks only when the tracked throughput
+    *drift* (fastest/slowest rank ratio) exceeds ``drift_threshold`` —
+    persistent imbalance the device-side claims cannot absorb because it
+    follows the rank, not the task. Below the threshold the segment
+    boundary is left untouched (with ``stealing=True`` the engine is
+    already rebalancing every scan step; a host re-plan would only
+    discard a good prefetch). ``drift_threshold=0.0`` picks a default:
+    2.0 for stealing handles, 1.0 (always re-plan, the legacy behavior)
+    otherwise. Returns the installed grid, or ``None`` when skipped."""
+    if not drift_threshold:
+        drift_threshold = 2.0 if handle.config.stealing else 1.0
+    drift = float(tracker.rate.max() / max(tracker.rate.min(), 1e-9))
+    if drift < drift_threshold:
+        return None
+    return replan_handle(handle, tracker)

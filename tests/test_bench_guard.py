@@ -1,0 +1,97 @@
+"""bench-guard (benchmarks/check_regression.py): schema + tolerance
+gates over the benchmark smoke artifacts, against synthetic fixtures."""
+import copy
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))                     # repo root: benchmarks/
+from benchmarks.check_regression import check, main  # noqa: E402
+
+FIG8 = {
+    "per_task_size": {"1024": {"resident_s": 1.0, "streamed_s": 1.0}},
+    "worst_overlap_win_pct": -2.0,
+    "streamed_within_10pct": True,
+}
+FIG9 = {
+    "model": {"rows": [{"s": 1.6, "t_2s": 2.0, "t_steal": 1.0}]},
+    "real": {"per_skew": {"0.0": {}}},
+    "steal_overhead_pct_worst": 6.0,
+    "criteria": {"steal_beats_2s_at_max_skew": True, "oracle_exact": True},
+}
+
+
+@pytest.fixture()
+def dirs(tmp_path):
+    results = tmp_path / "results"
+    baseline = tmp_path / "baseline"
+    results.mkdir()
+    baseline.mkdir()
+
+    def write(fig8=FIG8, fig9=FIG9, fresh_fig8=None, fresh_fig9=None):
+        (baseline / "BENCH_io_overlap.json").write_text(json.dumps(fig8))
+        (baseline / "BENCH_imbalance.json").write_text(json.dumps(fig9))
+        (results / "fig8_io_overlap.json").write_text(
+            json.dumps(fresh_fig8 if fresh_fig8 is not None else fig8))
+        (results / "fig9_imbalance.json").write_text(
+            json.dumps(fresh_fig9 if fresh_fig9 is not None else fig9))
+
+    return str(results), str(baseline), write
+
+
+def test_clean_artifacts_pass(dirs):
+    results, baseline, write = dirs
+    write()
+    assert check("fig8", results, baseline) == []
+    assert check("fig9", results, baseline) == []
+    assert main(["fig8", "fig9", "--results", results,
+                 "--baseline", baseline]) == 0
+
+
+def test_missing_fresh_artifact_fails(dirs, tmp_path):
+    results, baseline, write = dirs
+    write()
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    errs = check("fig8", str(empty), baseline)
+    assert errs and "missing" in errs[0]
+
+
+def test_missing_required_key_fails(dirs):
+    results, baseline, write = dirs
+    bad = copy.deepcopy(FIG9)
+    del bad["criteria"]["steal_beats_2s_at_max_skew"]
+    write(fresh_fig9=bad)
+    errs = check("fig9", results, baseline)
+    assert any("steal_beats_2s_at_max_skew" in e for e in errs)
+    assert main(["fig9", "--results", results, "--baseline", baseline]) == 1
+
+
+def test_tolerance_breach_fails_and_within_passes(dirs):
+    results, baseline, write = dirs
+    # fig8: win may drop at most 25pp below baseline (-2.0)
+    ok = dict(FIG8, worst_overlap_win_pct=-20.0)
+    bad = dict(FIG8, worst_overlap_win_pct=-40.0)
+    write(fresh_fig8=ok)
+    assert check("fig8", results, baseline) == []
+    write(fresh_fig8=bad)
+    errs = check("fig8", results, baseline)
+    assert any("regressed" in e for e in errs)
+    # fig9: steal overhead may rise at most 30pp above baseline (6.0)
+    worse = copy.deepcopy(FIG9)
+    worse["steal_overhead_pct_worst"] = 50.0
+    write(fresh_fig9=worse)
+    errs = check("fig9", results, baseline)
+    assert any("steal_overhead_pct_worst" in e for e in errs)
+
+
+def test_require_true_criteria_enforced(dirs):
+    results, baseline, write = dirs
+    lost = copy.deepcopy(FIG9)
+    lost["criteria"]["steal_beats_2s_at_max_skew"] = False
+    write(fresh_fig9=lost)
+    errs = check("fig9", results, baseline)
+    assert any("expected true" in e for e in errs)

@@ -192,6 +192,34 @@ def test_custom_usecase_with_local_reduce_combiner(tokens):
 # deprecated shim still works (one release)
 # ---------------------------------------------------------------------------
 
+def test_deprecated_shim_not_imported_eagerly():
+    """Importing repro.core must neither load the MapReduceJob shim
+    module nor emit any DeprecationWarning; the (single) warning fires
+    on use. Subprocess: this process has long imported repro.core."""
+    import subprocess
+    import sys
+    code = (
+        "import sys, warnings\n"
+        "with warnings.catch_warnings():\n"
+        "    warnings.simplefilter('error', DeprecationWarning)\n"
+        "    import repro.core\n"
+        "assert 'repro.core.api' not in sys.modules, 'shim loaded eagerly'\n"
+        "with warnings.catch_warnings(record=True) as rec:\n"
+        "    warnings.simplefilter('always')\n"
+        "    cls = repro.core.MapReduceJob       # attribute access: no warning\n"
+        "    assert 'repro.core.api' in sys.modules\n"
+        "    assert not rec, [str(w.message) for w in rec]\n"
+        "    cls(backend='1s')                   # use: exactly one warning\n"
+        "deps = [w for w in rec if issubclass(w.category, DeprecationWarning)]\n"
+        "assert len(deps) == 1, [str(w.message) for w in rec]\n"
+        "print('LAZY-SHIM-OK')\n"
+    )
+    out = subprocess.run([sys.executable, "-c", code], text=True,
+                         capture_output=True)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "LAZY-SHIM-OK" in out.stdout
+
+
 def test_mapreducejob_shim_deprecated_but_working(tokens):
     from repro.core.wordcount import WordCount as LegacyWordCount
     with pytest.warns(DeprecationWarning):

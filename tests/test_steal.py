@@ -1,0 +1,285 @@
+"""Work stealing (core/steal.py): the claim function's exactly-once
+property, schedule quality, and end-to-end exactness through the Job API.
+
+Load-bearing properties pinned here:
+
+  * the pure claim function pops every real task slot exactly once for
+    *random cursor states* (random grids, padding, repeats and progress
+    rows; P in {2, 4, 8}) — the no-dedup exactly-once argument;
+  * balanced workloads never pay a single steal (the margin hysteresis);
+  * skewed workloads get their work balanced (the fig9 mechanism);
+  * a streamed stealing job's records equal the resident run and the
+    unsteered 2s output — including across a mid-steal
+    checkpoint/restore round-trip (slow, 4-device subprocess).
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import JobConfig, submit, wordcount_oracle
+from repro.core.steal import claim_step, steal_schedule
+from repro.core.usecases import WordCount
+from repro.data.source import MmapTokenSource, ZipfSource, read_all
+
+VOCAB, N, TASK = 180, 8192, 512
+
+
+def random_grid(rng, P):
+    """Random assignment grid: random width, unique global ids, random
+    right-padding per rank, random repeats."""
+    T = int(rng.integers(1, 9))
+    counts = rng.integers(0, T + 1, size=P)
+    if counts.sum() == 0:
+        counts[int(rng.integers(0, P))] = 1
+    ids = -np.ones((P, T), np.int32)
+    pool = rng.permutation(int(counts.sum()))
+    k = 0
+    for r in range(P):
+        ids[r, : counts[r]] = pool[k: k + counts[r]]
+        k += counts[r]
+    reps = rng.integers(1, 9, size=(P, T)).astype(np.int32)
+    return ids, reps
+
+
+# ---------------------------------------------------------------------------
+# the claim function: exactly-once, determinism, hysteresis
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("P", [2, 4, 8])
+def test_every_task_claimed_exactly_once(P):
+    """Property: over random grids and random initial progress rows, the
+    replayed claim executes every real task exactly once — no loss, no
+    duplicate, regardless of how skewed the cursor state gets."""
+    rng = np.random.default_rng(P)
+    for trial in range(25):
+        ids, reps = random_grid(rng, P)
+        work0 = rng.integers(0, 40, size=P).astype(np.int32)
+        sched = steal_schedule(ids, reps, work0=work0)
+        executed = sched.exec_ids[sched.exec_ids >= 0]
+        expect = ids[ids >= 0]
+        assert sorted(executed.tolist()) == sorted(expect.tolist()), (
+            f"P={P} trial={trial}: claims lost or duplicated a task")
+        # the progress row accounts exactly the executed repeats
+        total = {int(i): int(r) for i, r in
+                 zip(ids.ravel(), reps.ravel()) if i >= 0}
+        assert int((sched.work - work0).sum()) == sum(total.values())
+
+
+@pytest.mark.parametrize("P", [2, 4, 8])
+def test_claim_step_respects_cursor_ranges(P):
+    """One round over random cursors: every claim addresses a slot
+    inside some rank's [head, tail) range, claims are distinct slots,
+    and the new cursors pop exactly the claimed slots."""
+    rng = np.random.default_rng(100 + P)
+    for _ in range(50):
+        tail0 = rng.integers(0, 10, size=P)
+        head0 = np.array([rng.integers(0, t + 1) for t in tail0])
+        work = rng.integers(0, 30, size=P)
+        sr, sc, head, tail = (np.asarray(x) for x in claim_step(
+            head0.astype(np.int32), tail0.astype(np.int32),
+            work.astype(np.int32)))
+        claimed = [(int(r), int(c)) for r, c in zip(sr, sc) if r >= 0]
+        assert len(set(claimed)) == len(claimed)        # distinct slots
+        for r, c in claimed:
+            assert head0[r] <= c < tail0[r]
+        # cursors shrink by exactly the number of claims per rank
+        popped = np.bincount([r for r, _ in claimed], minlength=P)
+        np.testing.assert_array_equal(
+            (head - head0) + (tail0 - tail), popped)
+        # nobody idles while any deque still has tasks
+        n_idle = int((sr < 0).sum())
+        remaining = int((tail - head).sum())
+        assert n_idle == 0 or remaining == 0
+
+
+def test_claim_deterministic_across_calls():
+    head = np.zeros(4, np.int32)
+    tail = np.array([3, 5, 2, 4], np.int32)
+    work = np.array([9, 0, 4, 27], np.int32)
+    a = [np.asarray(x) for x in claim_step(head, tail, work)]
+    b = [np.asarray(x) for x in claim_step(head, tail, work)]
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_balanced_workload_never_steals():
+    ids = np.arange(32, dtype=np.int32).reshape(4, 8)
+    reps = np.ones((4, 8), np.int32)
+    sched = steal_schedule(ids, reps)
+    assert sched.n_stolen == 0
+    # everyone just walked their own list in order
+    np.testing.assert_array_equal(sched.exec_ids, ids)
+
+
+def test_skewed_workload_balances_and_packs():
+    """The fig9 mechanism: a hot rank's tasks migrate to ranks that ran
+    ahead, so per-rank work evens out AND the lockstep makespan
+    (sum of per-step maxima) drops."""
+    P, T = 4, 8
+    ids = np.arange(P * T, dtype=np.int32).reshape(P, T)
+    reps = np.ones((P, T), np.int32)
+    reps[0] = 8                               # rank 0 is hot
+    sched = steal_schedule(ids, reps)
+    assert sched.n_stolen > 0
+    assert sched.work.max() / sched.work.mean() < 1.15
+    makespan = sched.exec_reps.max(axis=0).sum()
+    assert makespan < reps.max(axis=0).sum() * 0.6
+
+
+# ---------------------------------------------------------------------------
+# Job API: exactness with stealing on (single device, P=1 fast path)
+# ---------------------------------------------------------------------------
+
+def _cfg(segment=0, stealing=True, backend="1s"):
+    return JobConfig(usecase=WordCount(vocab=VOCAB), backend=backend,
+                     task_size=TASK, push_cap=256, n_procs=1,
+                     segment=segment, stealing=stealing)
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    rng = np.random.default_rng(21)
+    return rng.integers(0, VOCAB, size=N).astype(np.int32)
+
+
+@pytest.mark.parametrize("kind", ["array", "mmap", "zipf"])
+def test_streamed_equals_resident_with_stealing(tokens, tmp_path, kind):
+    if kind == "array":
+        src = tokens
+    elif kind == "mmap":
+        path = os.path.join(str(tmp_path), "steal.bin")
+        tokens.tofile(path)
+        src = MmapTokenSource(path)
+    else:
+        src = ZipfSource(N, vocab=VOCAB, seed=4)
+    resident = read_all(src) if kind != "array" else tokens
+    oracle = wordcount_oracle(resident, VOCAB)
+    assert submit(_cfg(), src).result().records == oracle
+    res = submit(_cfg(segment=3), src).result()
+    assert res.records == oracle
+    assert res.n_steals == 0                  # P=1: nothing to steal from
+
+
+def test_stealing_checkpoint_restore_round_trip(tokens, tmp_path):
+    from repro.ckpt.checkpoint import CheckpointManager
+    oracle = wordcount_oracle(tokens, VOCAB)
+    cfg = _cfg(segment=2)
+    mgr = CheckpointManager(os.path.join(str(tmp_path), "ck"))
+    h = submit(cfg, tokens)
+    h.step()
+    h.step()
+    h.checkpoint(mgr)
+    mgr.wait()
+    _, extra = mgr.peek()
+    assert extra["stealing"] is True
+    h2 = submit(cfg, tokens).restore(mgr)
+    assert h2.cursor == 4
+    assert h2.result().records == oracle
+
+
+def test_restore_rejects_stealing_mismatch(tokens, tmp_path):
+    """A snapshot's claim-state accounting is only meaningful in the
+    mode that produced it — restoring across a stealing mismatch must
+    fail loudly (like the backend guard), not corrupt the stats."""
+    from repro.ckpt.checkpoint import CheckpointManager
+    mgr = CheckpointManager(os.path.join(str(tmp_path), "ck"))
+    h = submit(_cfg(segment=2, stealing=False), tokens)
+    h.step()
+    h.checkpoint(mgr)
+    mgr.wait()
+    with pytest.raises(ValueError, match="stealing"):
+        submit(_cfg(segment=2, stealing=True), tokens).restore(mgr)
+
+
+def test_stealing_rejected_on_backends_without_support(tokens):
+    with pytest.raises(ValueError, match="stealing"):
+        submit(_cfg(backend="2s"), tokens)
+
+
+def test_outer_rebalance_is_the_coarse_loop(tokens):
+    """Host re-planning over a stealing handle only fires on persistent
+    drift; fine-grained skew is left to the in-scan claims."""
+    from repro.ft.straggler import ThroughputTracker, outer_rebalance
+    h = submit(_cfg(segment=2), tokens)
+    h.step()
+    tr = ThroughputTracker(n_procs=1)
+    # balanced tracker + stealing handle: boundary left untouched
+    assert outer_rebalance(h, tr) is None
+    # drift past the threshold triggers the coarse re-plan of exactly
+    # the unread tasks
+    before = sorted(h.remaining_task_ids().tolist())
+    grid = outer_rebalance(h, tr, drift_threshold=0.5)
+    assert grid is not None
+    assert sorted(grid[grid >= 0].tolist()) == before
+    assert h.result().records == wordcount_oracle(tokens, VOCAB)
+
+
+def test_jobresult_has_steal_stats(tokens):
+    res = submit(_cfg(), tokens).result()
+    assert res.steals_per_rank.shape == (1,)
+    assert res.n_steals == 0
+    assert res.work_per_rank.sum() == res.n_tasks   # all repeats == 1
+
+
+# ---------------------------------------------------------------------------
+# multi-rank: device schedule == host replay, exact vs unsteered 2s,
+# mid-steal checkpoint (8-device subprocess)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_multirank_stealing_exact_and_matches_replay(devices8, tmp_path):
+    out = devices8(f"""
+        import numpy as np
+        from repro.core import JobConfig, submit
+        from repro.core.planner import plan_input, shard_task_ids
+        from repro.core.steal import steal_schedule
+        from repro.core.usecases import WordCount
+        from repro.ckpt.checkpoint import CheckpointManager
+
+        VOCAB, N, TASK, P = 300, 16384, 512, 4
+        rng = np.random.default_rng(5)
+        tokens = rng.integers(0, VOCAB, size=N).astype(np.int32)
+        plan = plan_input(N, TASK, P)
+        reps = np.ones((P, plan.tasks_per_proc), np.int32)
+        reps[0] = 8                                  # hot rank
+        base = JobConfig(usecase=WordCount(vocab=VOCAB), backend="2s",
+                         task_size=TASK, push_cap=512, n_procs=P)
+        r2 = submit(base, tokens, repeats=reps).result()
+        st_cfg = JobConfig(usecase=WordCount(vocab=VOCAB), backend="1s",
+                           task_size=TASK, push_cap=512, n_procs=P,
+                           stealing=True)
+        rs = submit(st_cfg, tokens, repeats=reps).result()
+        # oracle-exact: identical to the unsteered 2s output
+        assert rs.records == r2.records
+        assert rs.n_steals > 0
+        # the device scan realizes the host-replayed schedule bit-for-bit
+        sched = steal_schedule(shard_task_ids(plan), reps)
+        assert np.array_equal(sched.work, rs.work_per_rank)
+        assert np.array_equal(sched.stolen, rs.steals_per_rank)
+
+        # mid-steal checkpoint: snapshot while claim state is live,
+        # restore into a fresh handle, finish — still exact, and the
+        # final progress row matches the uninterrupted run
+        seg_cfg = JobConfig(usecase=WordCount(vocab=VOCAB), backend="1s",
+                            task_size=TASK, push_cap=512, n_procs=P,
+                            segment=2, stealing=True)
+        full = submit(seg_cfg, tokens, repeats=reps)
+        while full.step():
+            pass
+        ref = full.result()
+        assert ref.records == r2.records
+        mgr = CheckpointManager({str(tmp_path)!r})
+        h = submit(seg_cfg, tokens, repeats=reps)
+        h.step()
+        h.checkpoint(mgr)
+        mgr.wait()
+        assert np.asarray(h.carry.work).any()        # claim state is live
+        h2 = submit(seg_cfg, tokens, repeats=reps).restore(mgr)
+        res = h2.result()
+        assert res.records == r2.records
+        assert np.array_equal(res.work_per_rank, ref.work_per_rank)
+        assert np.array_equal(res.steals_per_rank, ref.steals_per_rank)
+        print("STEAL-OK", int(rs.n_steals), rs.work_per_rank.tolist())
+    """, n_devices=4)
+    assert "STEAL-OK" in out
