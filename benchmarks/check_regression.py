@@ -59,6 +59,31 @@ CHECKS: Dict[str, Dict] = {
         "require_true": ["criteria.steal_beats_2s_at_max_skew",
                          "criteria.oracle_exact"],
     },
+    "fig10": {
+        "fresh": "fig10_keyskew.json",
+        "baseline": "BENCH_keyskew.json",
+        "required": ["model.rows", "real.per_skew",
+                     "partitioner_overhead_pct_worst",
+                     "criteria.sampled_beats_hash_at_max_skew",
+                     "criteria.split_beats_hash_at_max_skew",
+                     "criteria.win_split_vs_hash_reduce_pct",
+                     "criteria.oracle_exact"],
+        "gates": [
+            # the modeled reduce-path win of the splitting partitioner
+            # over static hash may shrink vs the committed trajectory by
+            # at most 40 percentage points (smoke runs model a far
+            # smaller grid, so the margin is wide on purpose)
+            ("criteria.win_split_vs_hash_reduce_pct", "min", 40.0),
+            # pre-pass + placement overhead on real runs must not balloon
+            # structurally (e.g. the pre-pass re-reading the dataset);
+            # smoke engine runs are ~0.1 s on a noisy shared core, so
+            # only a blowup past ~100 points over baseline is signal
+            ("partitioner_overhead_pct_worst", "max", 100.0),
+        ],
+        "require_true": ["criteria.sampled_beats_hash_at_max_skew",
+                         "criteria.split_beats_hash_at_max_skew",
+                         "criteria.oracle_exact"],
+    },
 }
 
 

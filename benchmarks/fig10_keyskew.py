@@ -1,0 +1,311 @@
+"""Fig 10 — key-distribution skew: static hash vs skew-aware partitioners.
+
+PR 3 (fig9) attacked *rank* imbalance with work stealing; this benchmark
+attacks the reduce-side twin: a Zipf-skewed **key** distribution — what
+WordCount on natural text produces — under the paper's static
+``hash(key) % P`` ownership rule floods a few owners' windows, overflows
+their push buckets (ownership transfers) and piles work onto the Combine
+tree. Fan et al. (arXiv:1401.0355) balance the *observed* key
+distribution instead; ``core/partition.py`` implements that as:
+
+  * ``hash``          — the paper's modulo rule (baseline);
+  * ``sampled``       — greedy LPT owner map from a sampled key
+                        histogram (planner pre-pass);
+  * ``sampled+split`` — additionally spreads hot keys over several
+                        owners (mappers pick a replica by task id;
+                        Combine's dup-sum keeps results exact).
+
+Methodology mirrors fig9: **real runs** on host devices validate
+exactness — every partitioner × {1s, 1s+steal} × skew must produce
+records identical to the hash baseline (and the oracle) — and measure
+the pre-pass overhead, while the **deterministic placement model**
+replays the engines' exact bucketing rule over a synthetic corpus at
+paper scale: per task, each key the task contains is one record routed
+to ``owner(key, task)``; per-owner received-record totals give the
+reduce-side load, calibrated per-record fold/merge costs turn them into
+a modeled reduce+combine makespan, and per-(task, owner) counts over
+``push_cap`` give the ownership-transfer volume.
+
+Artifacts: ``results/fig10_keyskew.json`` + repo-root
+``BENCH_keyskew.json``.
+
+    PYTHONPATH=src python benchmarks/fig10_keyskew.py [--quick|--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List
+
+import numpy as np
+
+try:
+    from benchmarks.common import REPO, calibrate, run_py, save_json
+except ImportError:                      # invoked as a script from benchmarks/
+    from common import REPO, calibrate, run_py, save_json
+
+SKEWS = [1.1, 1.4, 1.8, 2.2]             # ZipfSource exponent (a > 1)
+VOCAB = 65536
+TASK_SIZE = 4096                         # shared with calibration
+PUSH_CAP = 1024
+SENT = np.int32(np.iinfo(np.int32).max)
+
+REAL_CODE = """
+import json
+import numpy as np
+from repro.core import JobConfig, submit
+from repro.core.usecases import WordCount, wordcount_oracle
+from repro.data.source import ZipfSource, read_all
+
+P, N, VOCAB, TASK, CAP = {n_procs}, {n_tokens}, {vocab}, {task_size}, {push_cap}
+COMBOS = [("1s", False), ("1s+steal", True)]
+PARTS = ["hash", "sampled", "sampled+split"]
+out = {{}}
+for a in {skews}:
+    src = ZipfSource(N, vocab=VOCAB, a=a, seed=2)
+    oracle = wordcount_oracle(read_all(src), VOCAB)
+    row = {{}}
+    base = None
+    for engine, stealing in COMBOS:
+        for part in PARTS:
+            cfg = JobConfig(usecase=WordCount(vocab=VOCAB), backend="1s",
+                            task_size=TASK, push_cap=CAP, n_procs=P,
+                            stealing=stealing, partitioner=part)
+            submit(cfg, src).result()                 # compile + warm
+            walls = []
+            for _ in range({reps_n}):
+                res = submit(cfg, src).result()
+                walls.append(res.wall_time)
+            if base is None:
+                base = res.records
+            # recorded, not asserted: the artifact carries the real
+            # outcome so bench-guard's oracle_exact gate is a live check
+            row[engine + "|" + part] = dict(
+                wall_s=min(walls),
+                n_split_keys=res.n_split_keys,
+                records_equal=bool(res.records == base),
+                oracle_equal=bool(res.records == oracle))
+    out[str(a)] = row
+print(json.dumps(out))
+"""
+
+
+def _mix32_np(x: np.ndarray) -> np.ndarray:
+    """kv.mix32 in numpy (uint64 lanes, masked to 32 bits) — the host
+    replay of the device owner pick for split keys."""
+    m = np.uint64(0xFFFFFFFF)
+    x = x.astype(np.uint64) & m
+    x ^= x >> np.uint64(16)
+    x = (x * np.uint64(0x85EBCA6B)) & m
+    x ^= x >> np.uint64(13)
+    x = (x * np.uint64(0xC2B2AE35)) & m
+    x ^= x >> np.uint64(16)
+    return x
+
+
+def _check_mix():
+    import jax.numpy as jnp
+    from repro.core.kv import mix32
+    xs = np.arange(1024, dtype=np.uint32)
+    ref = np.asarray(mix32(jnp.asarray(xs))).astype(np.uint64)
+    got = _mix32_np(xs)
+    assert (ref == got).all(), "host mix32 diverged from kv.mix32"
+
+
+def _task_uniques(source, n_tasks: int, task_size: int) -> List[np.ndarray]:
+    out = []
+    for t in range(n_tasks):
+        chunk = source.read(t * task_size, task_size)
+        out.append(np.unique(chunk[chunk != SENT]))
+    return out
+
+
+def placement_stats(uniques: List[np.ndarray], omap: np.ndarray,
+                    osplit: np.ndarray, n_procs: int,
+                    push_cap: int) -> Dict:
+    """Replay the engines' routing rule (bucketize + lookup_owner) over
+    one corpus: per-owner received records and per-(task, owner) counts
+    past ``push_cap`` (= ownership transfers kept local)."""
+    recv = np.zeros((n_procs,), np.int64)
+    transfers = 0
+    for tid, keys in enumerate(uniques):
+        k = np.maximum(osplit[keys], 1)
+        pick = (_mix32_np(np.full(keys.shape, tid, np.uint32))
+                % k.astype(np.uint64)).astype(np.int64)
+        owners = (omap[keys].astype(np.int64)
+                  + np.where(k > 1, pick, 0)) % n_procs
+        counts = np.bincount(owners, minlength=n_procs)
+        recv += counts
+        transfers += int(np.maximum(counts - push_cap, 0).sum())
+    mean = recv.mean() if recv.mean() else 1.0
+    return dict(recv_per_owner_max=int(recv.max()),
+                recv_total=int(recv.sum()),
+                owner_imbalance=float(recv.max() / mean),
+                transfers=transfers)
+
+
+def model_rows(calib: Dict, P: int, tasks_per_rank: int, task_size: int,
+               model_push_cap: int, sample_tasks: int, skews) -> List[Dict]:
+    from repro.core.partition import (HashPartitioner, SampledPartitioner,
+                                      sample_key_histogram)
+    from repro.core.planner import plan_input, read_tasks
+    from repro.core.usecases import WordCount
+    from repro.data.source import ZipfSource
+
+    # calibrated per-record costs: a (P, cap) chunk fold / a W-wide merge
+    t_rec = calib["t_fold"] / (8 * PUSH_CAP)
+    t_xfer = calib["t_merge"] / VOCAB
+    t_map = tasks_per_rank * calib["t_task1"]
+    n_tasks = P * tasks_per_rank
+    uc = WordCount(vocab=VOCAB)
+    parts = {"hash": HashPartitioner(),
+             "sampled": SampledPartitioner(sample_tasks=sample_tasks),
+             "sampled+split": SampledPartitioner(
+                 sample_tasks=sample_tasks, split=True)}
+    rows = []
+    for a in skews:
+        src = ZipfSource(n_tasks * task_size, vocab=VOCAB, a=a, seed=2)
+        uniques = _task_uniques(src, n_tasks, task_size)
+        plan = plan_input(n_tasks * task_size, task_size, P)
+        hist = sample_key_histogram(
+            lambda ids: read_tasks(src, plan, ids), plan, uc, sample_tasks)
+        row: Dict = {"a": a, "P": P, "n_tasks": n_tasks, "per_part": {}}
+        for name, part in parts.items():
+            omap, osplit = part.build(hist, P)
+            st = placement_stats(uniques, omap, osplit, P, model_push_cap)
+            # reduce-side critical path: the hottest owner's folds, plus
+            # the transferred records the Combine tree must chew through
+            st["t_reduce_s"] = (st["recv_per_owner_max"] * t_rec
+                                + st["transfers"] * t_xfer)
+            st["t_total_s"] = t_map + st["t_reduce_s"]
+            st["n_split_keys"] = int((osplit > 1).sum())
+            row["per_part"][name] = st
+        h = row["per_part"]["hash"]
+        for name in ("sampled", "sampled+split"):
+            p = row["per_part"][name]
+            p["win_reduce_vs_hash_pct"] = 100 * (
+                1 - p["t_reduce_s"] / h["t_reduce_s"]) \
+                if h["t_reduce_s"] else 0.0
+            p["win_total_vs_hash_pct"] = 100 * (
+                1 - p["t_total_s"] / h["t_total_s"])
+        rows.append(row)
+    return rows
+
+
+def measure_real(skews, n_procs: int, n_tokens: int, reps_n: int) -> Dict:
+    out = run_py(REAL_CODE.format(n_procs=n_procs, n_tokens=n_tokens,
+                                  vocab=VOCAB, task_size=TASK_SIZE,
+                                  push_cap=PUSH_CAP, skews=list(skews),
+                                  reps_n=reps_n),
+                 n_devices=n_procs)
+    return json.loads(out.strip().splitlines()[-1])
+
+
+def run(quick: bool = False, smoke: bool = False) -> Dict:
+    _check_mix()
+    if smoke:
+        # the model pass is host numpy (cheap) — smoke keeps the quick
+        # grid so its headline win stays comparable to the committed
+        # baseline; only the real-run scale shrinks
+        skews = [SKEWS[0], SKEWS[-1]]
+        model_p, model_t, model_task, sample = 32, 16, 1024, 16
+        real_p, real_n, reps_n = 2, 262_144, 2
+    elif quick:
+        skews = SKEWS
+        model_p, model_t, model_task, sample = 32, 16, 1024, 16
+        real_p, real_n, reps_n = 4, 262_144, 2
+    else:
+        skews = SKEWS
+        model_p, model_t, model_task, sample = 64, 32, 1024, 32
+        real_p, real_n, reps_n = 8, 1_000_000, 3
+
+    print("[fig10] calibrating per-op costs...")
+    calib = calibrate(task_size=TASK_SIZE, push_cap=PUSH_CAP)
+    # model push_cap scaled to the model task size so hot owners actually
+    # overflow (the full-size cap would hide the transfer mechanism at
+    # model scale)
+    model_cap = max(model_task // 256, 4)
+    rows = model_rows(calib, model_p, model_t, model_task, model_cap,
+                      sample, skews)
+    for r in rows:
+        h, s, sp = (r["per_part"][k] for k in
+                    ("hash", "sampled", "sampled+split"))
+        print(f"[fig10] model a={r['a']:<4} imbalance "
+              f"hash={h['owner_imbalance']:.2f} "
+              f"sampled={s['owner_imbalance']:.2f} "
+              f"split={sp['owner_imbalance']:.2f}  "
+              f"(split vs hash reduce "
+              f"{sp['win_reduce_vs_hash_pct']:+.1f}%, "
+              f"{sp['n_split_keys']} keys split)")
+
+    print(f"[fig10] real runs (P={real_p}, N={real_n})...")
+    real = measure_real(skews, real_p, real_n, reps_n)
+    exact = all(b["records_equal"] and b["oracle_equal"]
+                for v in real.values() for b in v.values())
+    # pre-pass + non-hash placement overhead on real wall time (1s engine)
+    overhead = [100.0 * (v["1s|" + p]["wall_s"] / v["1s|hash"]["wall_s"] - 1)
+                for v in real.values() for p in ("sampled", "sampled+split")]
+    top = rows[-1]["per_part"]
+    rec = {
+        "skews": list(skews), "vocab": VOCAB,
+        "model": {"P": model_p, "tasks_per_rank": model_t,
+                  "task_size": model_task, "push_cap": model_cap,
+                  "sample_tasks": sample, "rows": rows},
+        "real": {"P": real_p, "n_tokens": real_n, "per_skew": real},
+        "calibration": calib,
+        "partitioner_overhead_pct_worst": max(overhead),
+        "criteria": {
+            # the acceptance gates: at the highest key skew the sampled
+            # map must beat static hash on the modeled reduce path, and
+            # splitting must beat plain sampling...
+            "sampled_beats_hash_at_max_skew": bool(
+                top["sampled"]["t_reduce_s"] < top["hash"]["t_reduce_s"]),
+            "split_beats_hash_at_max_skew": bool(
+                top["sampled+split"]["t_reduce_s"]
+                < top["hash"]["t_reduce_s"]),
+            "win_split_vs_hash_reduce_pct": top["sampled+split"][
+                "win_reduce_vs_hash_pct"],
+            "hash_owner_imbalance_at_max_skew": top["hash"][
+                "owner_imbalance"],
+            "split_owner_imbalance_at_max_skew": top["sampled+split"][
+                "owner_imbalance"],
+            # ...while every real run stayed record-identical to the
+            # hash baseline AND the numpy oracle (measured, not assumed)
+            "oracle_exact": exact,
+        },
+    }
+    path = save_json("fig10_keyskew.json", rec)
+    wrote = [path]
+    if not smoke:
+        # only full/quick runs refresh the committed trajectory baseline
+        # — a CI-scale smoke run must never clobber it (same rule as fig9)
+        root = os.path.join(REPO, "BENCH_keyskew.json")
+        with open(root, "w") as f:
+            json.dump(rec, f, indent=1)
+        wrote.append(root)
+    c = rec["criteria"]
+    print(f"[fig10] split vs hash at a={rows[-1]['a']}: "
+          f"{c['win_split_vs_hash_reduce_pct']:+.1f}% modeled reduce win "
+          f"(owner imbalance {c['hash_owner_imbalance_at_max_skew']:.2f} "
+          f"-> {c['split_owner_imbalance_at_max_skew']:.2f}; worst real "
+          f"overhead {max(overhead):+.1f}%)")
+    print("wrote " + " and ".join(wrote))
+    if not exact:
+        raise RuntimeError("partitioners diverged — see real.per_skew "
+                           "records_equal/oracle_equal flags")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller model grid / fewer tokens")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: tiny run, still writes results/*.json")
+    args = ap.parse_args()
+    run(quick=args.quick, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -2,7 +2,12 @@
 # engine and its bulk-synchronous reference, behind the unified Job API —
 # pluggable backends (registry), declarative use-cases, and a streaming
 # JobHandle lifecycle.
-from repro.core.job import JobConfig, JobHandle, JobResult, submit
+from repro.core.job import (CombineOverflowError, JobConfig, JobHandle,
+                            JobResult, submit)
+from repro.core.partition import (HashPartitioner, Partitioner,
+                                  SampledPartitioner,
+                                  available_partitioners,
+                                  resolve_partitioner)
 from repro.core.registry import (Backend, JobSpec, UnknownBackendError,
                                  available_backends, get_backend,
                                  register_backend)

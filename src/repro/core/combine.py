@@ -17,22 +17,34 @@ import math
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.kv import merge_sorted
+from repro.core.kv import local_reduce
 
 
 def n_levels(n_procs: int) -> int:
     return int(math.ceil(math.log2(max(n_procs, 2))))
 
 
-def tree_combine(keys, vals, axis: str, n_procs: int):
+def tree_combine(keys, vals, axis: str, n_procs: int, overflow=None):
     """Run the merge tree inside a shard_map region.
 
     keys/vals: this process's sorted unique records, (W,), sentinel-padded.
-    Returns rank 0's final merged records (other ranks return their last
-    partial state — callers slice rank 0).
+    ``overflow`` seeds the per-rank count of records already lost before
+    the tree (e.g. squeezing a window into W — see ``combine_records``).
+
+    Returns ``(keys, vals, total_overflow)``: rank 0 holds the final
+    merged records (other ranks return their last partial state —
+    callers slice rank 0), while ``total_overflow`` is the *global*
+    count of records dropped anywhere on the way to rank 0 — each
+    W-wide merge of two runs whose key union exceeds W truncates the
+    union, and that loss used to vanish silently at the next level.
+    The count is psum-replicated, so every rank returns the same value
+    and a 0 guarantees the rank-0 records are exact.
     """
     W = keys.shape[0]
     rank = lax.axis_index(axis)
+    if overflow is None:
+        overflow = jnp.int32(0)
+    total = lax.psum(overflow.astype(jnp.int32), axis)
     for level in range(n_levels(n_procs)):
         stride = 1 << level
         perm = [(i + stride, i) for i in range(0, n_procs, stride * 2)
@@ -42,7 +54,11 @@ def tree_combine(keys, vals, axis: str, n_procs: int):
         # ppermute delivers zeros to non-receivers; treat key 0 as valid only
         # on true receivers by masking the merge with receiver-ship.
         is_receiver = (rank % (stride * 2) == 0) & (rank + stride < n_procs)
-        mk, mv = merge_sorted(keys, vals, rk, rv, W)
+        mk, mv, n_union = local_reduce(jnp.concatenate([keys, rk]),
+                                       jnp.concatenate([vals, rv]), W)
+        lost = jnp.where(is_receiver,
+                         jnp.maximum(n_union.astype(jnp.int32) - W, 0), 0)
+        total = total + lax.psum(lost, axis)
         keys = jnp.where(is_receiver, mk, keys)
         vals = jnp.where(is_receiver, mv, vals)
-    return keys, vals
+    return keys, vals, total

@@ -38,12 +38,14 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Union
 
 import numpy as np
 
 from repro.core import planner
 from repro.core.kv import KEY_SENTINEL
+from repro.core.partition import (Partitioner, resolve_partitioner,
+                                  sample_key_histogram)
 from repro.core.registry import Backend, JobSpec, get_backend
 from repro.core.usecase import UseCase, as_map_fn, finalize
 from repro.core.windows import AXIS
@@ -65,6 +67,13 @@ class JobConfig:
     stealing: bool = False    # device-side work stealing inside the engine
                               #   scan (core/steal.py) — fine-grained
                               #   rebalancing under the host re-planner
+    partitioner: Union[str, Partitioner] = "hash"
+                              # reduce-side key→owner strategy
+                              #   (core/partition.py): "hash" (static
+                              #   modulo rule), "sampled" (balanced owner
+                              #   map from a planner pre-pass),
+                              #   "sampled+split" (hot keys spread over
+                              #   several owners), or any Partitioner
 
 
 @dataclass(frozen=True)
@@ -83,6 +92,14 @@ class JobResult:
                                  #   row; otherwise it equals the assignment)
     steals_per_rank: np.ndarray  # tasks each rank executed for a peer
                                  #   (all-zero unless stealing was on)
+    partitioner: str = "hash"    # reduce-side key→owner strategy that ran
+    n_split_keys: int = 0        # hot keys spread over >1 owner (0 unless
+                                 #   a splitting partitioner was active)
+    combine_overflow: int = 0    # records lost to an undersized
+                                 #   combine_capacity anywhere in the
+                                 #   Combine phase; result() refuses to
+                                 #   hand out records when it is nonzero
+                                 #   (CombineOverflowError)
 
     @property
     def n_steals(self) -> int:
@@ -94,6 +111,25 @@ class JobResult:
         """max/mean of per-rank work — 1.0 means perfectly balanced."""
         mean = self.work_per_rank.mean()
         return float(self.work_per_rank.max() / mean) if mean else 1.0
+
+
+class CombineOverflowError(RuntimeError):
+    """The Combine phase lost records to an undersized
+    ``combine_capacity`` — the counts in ``self.result.records`` are
+    WRONG (previously this truncation was silent). Size
+    ``JobConfig(combine_capacity=...)`` to at least the number of
+    distinct keys the job produces (0 defaults to the full window,
+    which can never overflow)."""
+
+    def __init__(self, result: "JobResult"):
+        self.result = result
+        super().__init__(
+            f"Combine overflow: {result.combine_overflow} record(s) were "
+            f"dropped because combine_capacity is smaller than the number "
+            f"of distinct keys — the returned counts would be wrong. "
+            f"Raise JobConfig(combine_capacity=...) (>= distinct keys; "
+            f"0 uses the full window, which never overflows). The partial "
+            f"result is attached as err.result.")
 
 
 def submit(config: JobConfig, dataset, *, mesh=None, repeats=None,
@@ -111,11 +147,13 @@ def submit(config: JobConfig, dataset, *, mesh=None, repeats=None,
             f"backend {config.backend!r} does not implement device-side "
             "work stealing (no supports_stealing attribute) — drop "
             "stealing=True or use backend '1s'")
+    partitioner = resolve_partitioner(config.partitioner)  # fail fast too
     window = config.window or config.usecase.window
     spec = JobSpec(vocab=window, task_size=config.task_size,
                    push_cap=config.push_cap, n_procs=config.n_procs,
                    combine_capacity=config.combine_capacity,
-                   segment=config.segment, stealing=config.stealing)
+                   segment=config.segment, stealing=config.stealing,
+                   partitioner=partitioner.name)
     from repro.distributed.mesh import local_mesh
     if mesh is None:
         mesh = local_mesh((config.n_procs,), ("procs",))
@@ -133,7 +171,7 @@ def submit(config: JobConfig, dataset, *, mesh=None, repeats=None,
         segment=config.segment if config.segment > 0 else max(T, 1),
         sharding=NamedSharding(mesh, PartitionSpec(AXIS)),
         prefetch=prefetch)
-    return JobHandle(config, backend, spec, mesh, plan, feed)
+    return JobHandle(config, backend, spec, mesh, plan, feed, partitioner)
 
 
 class JobHandle:
@@ -152,18 +190,37 @@ class JobHandle:
     """
 
     def __init__(self, config, backend: Backend, spec, mesh, plan,
-                 feed: SegmentFeed):
+                 feed: SegmentFeed, partitioner: Optional[Partitioner] = None):
         self.config = config
         self.backend = backend
         self.spec = spec
         self.mesh = mesh
         self.plan = plan
         self.feed = feed
+        self.partitioner = (resolve_partitioner(config.partitioner)
+                            if partitioner is None else partitioner)
         self._map_fn = as_map_fn(config.usecase)
         self._seg_fns = None
         self._carry = None
+        self._owner_ready = False   # sampled owner map installed (or a
+                                    #   snapshot's map adopted by restore)
         self._wall = 0.0
         self._result: Optional[JobResult] = None
+
+    # -- resource lifecycle -------------------------------------------------
+
+    def close(self):
+        """Stop the feed's prefetch thread. Idempotent; safe on a job in
+        any state (an abandoned or failed handle must not leak the
+        thread)."""
+        self.feed.close()
+
+    def __enter__(self) -> "JobHandle":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
 
     # -- introspection ------------------------------------------------------
 
@@ -219,6 +276,40 @@ class JobHandle:
                 self.spec, self._map_fn, self.mesh)
             self._carry = self._seg_fns[0]()
 
+    def _ensure_owner_map(self):
+        """Overwrite the carry's hash-seeded owner map with the skew-aware
+        one (planner pre-pass through the feed, so the sample bytes land
+        in ``feed.stats``). The map is carry *data*: the jitted engine is
+        shared across partitioners. Deferred until the first advance /
+        checkpoint so a ``restore`` — which adopts the *snapshot's* map
+        wholesale — never pays for a sample it would throw away; the
+        pre-pass time counts into ``wall_time`` (it is real job cost)."""
+        if self._owner_ready:
+            return
+        self._owner_ready = True
+        if not self.partitioner.needs_sample:
+            return                      # hash map already seeded by init
+        t0 = time.perf_counter()
+        self._install_partitioner()
+        self._wall += time.perf_counter() - t0
+
+    def _install_partitioner(self):
+        # sized by the ENGINE's window (spec.vocab — a JobConfig(window=)
+        # override may widen it past usecase.window): the owner map must
+        # match the compiled carry's shape or restore would reject it
+        hist = sample_key_histogram(
+            self.feed.sample_tasks, self.plan, self.config.usecase,
+            getattr(self.partitioner, "sample_tasks", 16),
+            window=self.spec.vocab)
+        omap, osplit = self.partitioner.build(hist, self.spec.n_procs)
+        P = self.spec.n_procs
+        self._carry = self._carry._replace(
+            owner_map=np.ascontiguousarray(
+                np.broadcast_to(np.asarray(omap, np.int32), (P, len(omap)))),
+            owner_split=np.ascontiguousarray(
+                np.broadcast_to(np.asarray(osplit, np.int32),
+                                (P, len(osplit)))))
+
     def _ensure_segmented(self):
         if self.config.segment <= 0:
             raise RuntimeError(
@@ -227,6 +318,7 @@ class JobHandle:
         self._ensure_engine()
 
     def _advance(self, n_segments: int) -> bool:
+        self._ensure_owner_map()
         _, seg_fn, _ = self._seg_fns
         t0 = time.perf_counter()
         for _ in range(n_segments):
@@ -270,7 +362,8 @@ class JobHandle:
         the paper's MPI-storage-windows trick. The manifest records the
         feed position and task assignment, so restore can seek."""
         self._ensure_segmented()
-        assert self._carry is not None
+        self._ensure_owner_map()    # a pre-step snapshot must carry the
+        assert self._carry is not None      # sampled map, not the seed
         # reserved keys win over caller extras: restore() trusts them
         return manager.save_async(
             self.cursor, self._carry,
@@ -278,6 +371,7 @@ class JobHandle:
                    "cursor": self.cursor,
                    "backend": self.backend.name,
                    "stealing": self.config.stealing,
+                   "partitioner": self.spec.partitioner,
                    "task_ids": self.feed.task_ids_grid.tolist(),
                    "repeats": self.feed.repeats_grid.tolist()})
 
@@ -307,20 +401,32 @@ class JobHandle:
                 f"stealing={self.config.stealing} handle would corrupt "
                 "the carry's progress/steal accounting; resubmit with "
                 f"JobConfig(stealing={bool(saved_steal)})")
+        saved_part = extra.get("partitioner")
+        if saved_part is not None and saved_part != self.spec.partitioner:
+            raise ValueError(
+                f"checkpoint step {found} was taken with "
+                f"partitioner={saved_part!r} — restoring into a "
+                f"{self.spec.partitioner!r} handle would mix two owner "
+                "maps in one job (the windows already reflect the saved "
+                "assignment); resubmit with "
+                f"JobConfig(partitioner={saved_part!r})")
         # load exactly the snapshot the guard inspected (a concurrent
         # async save could otherwise re-resolve "latest" to a newer step)
         _, carry, extra = manager.restore(
             jax.eval_shape(lambda: self._carry), step=found)
         self._carry = carry
+        self._owner_ready = True    # the snapshot's owner map IS the map
         self.feed.seek(int(extra["cursor"]),
                        task_ids=extra.get("task_ids"),
                        repeats=extra.get("repeats"))
         return self
 
     def load(self, carry, cursor: int) -> "JobHandle":
-        """Install an in-memory carry snapshot (elastic/straggler paths)."""
+        """Install an in-memory carry snapshot (elastic/straggler paths).
+        The snapshot's owner map comes with it — no re-sample."""
         self._ensure_segmented()
         self._carry = carry
+        self._owner_ready = True
         self.feed.seek(int(cursor))
         return self
 
@@ -328,18 +434,35 @@ class JobHandle:
 
     def result(self) -> JobResult:
         """Run to completion (whatever mode) and return the JobResult.
-        Oneshot jobs take the same streamed path with one big segment."""
-        if self._result is not None:
-            return self._result
+        Oneshot jobs take the same streamed path with one big segment.
+
+        Raises :class:`CombineOverflowError` when the Combine phase lost
+        records to an undersized ``combine_capacity`` — the counts would
+        be silently wrong otherwise (the partial result rides on the
+        error). The feed's prefetch thread is stopped on every exit
+        path, success or not — a raising ``segment_fn``/``finish_fn``
+        must not leak it."""
+        if self._result is None:
+            try:
+                self._result = self._finish()
+            except BaseException:
+                self.feed.close()          # error path: don't leak prefetch
+                raise
+        if self._result.combine_overflow:
+            raise CombineOverflowError(self._result)
+        return self._result
+
+    def _finish(self) -> JobResult:
         self._ensure_engine()
         while self._advance(1):
             pass
         self.feed.close()                  # stream drained: stop prefetch
         _, _, fin_fn = self._seg_fns
         t0 = time.perf_counter()
-        keys, vals = fin_fn(self._carry)
+        keys, vals, overflow = fin_fn(self._carry)
         keys = np.asarray(keys)[0]
         vals = np.asarray(vals)[0]
+        overflow = int(np.asarray(overflow)[0])   # psum-replicated
         self._wall += time.perf_counter() - t0
         valid = keys != int(KEY_SENTINEL)
         records = dict(zip(keys[valid].tolist(), vals[valid].tolist()))
@@ -353,7 +476,7 @@ class JobHandle:
         else:
             work = (reps * task_valid).sum(axis=1)
             steals = np.zeros((self.config.n_procs,), np.int32)
-        self._result = JobResult(
+        return JobResult(
             records=records,
             output=finalize(self.config.usecase, records),
             keys=keys, values=vals,
@@ -363,5 +486,8 @@ class JobHandle:
             tasks_per_rank=task_valid.sum(axis=1),
             work_per_rank=work,
             steals_per_rank=steals,
+            partitioner=self.spec.partitioner,
+            n_split_keys=int(
+                (np.asarray(self._carry.owner_split)[0] > 1).sum()),
+            combine_overflow=overflow,
         )
-        return self._result

@@ -89,15 +89,20 @@ def merge_sorted(keys_a, vals_a, keys_b, vals_b, capacity: int):
     return local_reduce(k, v, capacity)[:2]
 
 
-def bucketize(keys, values, n_procs: int, cap: int):
+def bucketize(keys, values, n_procs: int, cap: int, owners=None):
     """Scatter records into per-owner buckets — the paper's one-sided put
     target layout: (P, cap) records + per-owner fill counts.
 
-    Records beyond ``cap`` for a hot owner are *dropped from the push* and
-    reported in ``overflow`` so the caller can retain them locally (the
-    paper's ownership-transfer semantics, footnote 2).
+    ``owners`` overrides the default ``hash(key) % P`` rule with a
+    precomputed per-record owner vector (values in [0, n_procs]; the
+    skew-aware maps of :mod:`repro.core.partition` resolve it from the
+    carried owner map). Records beyond ``cap`` for a hot owner are
+    *dropped from the push* and reported in ``overflow`` so the caller
+    can retain them locally (the paper's ownership-transfer semantics,
+    footnote 2).
     """
-    owners = owner_of(keys, n_procs)
+    if owners is None:
+        owners = owner_of(keys, n_procs)
     valid = keys != KEY_SENTINEL
     owners = jnp.where(valid, owners, n_procs)      # invalid -> ghost bucket
     order = jnp.argsort(owners, stable=True)

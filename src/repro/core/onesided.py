@@ -33,6 +33,7 @@ from jax import lax
 
 from repro.core.combine import tree_combine
 from repro.core.kv import KEY_SENTINEL, bucketize, local_reduce_repeated
+from repro.core.partition import lookup_owner
 from repro.core.registry import JobSpec, memoized, register_backend
 from repro.core.windows import (AXIS, DenseWindow, EngineCarry,
                                 STATUS_REDUCE, combine_records, init_carry,
@@ -49,8 +50,12 @@ def _step(spec: JobSpec, map_fn: Callable, carry: EngineCarry, xs):
     # factor re-computes the whole task (paper footnote 5) — per-rank
     # while-trip-counts differ, which is exactly the imbalance mechanism.
     uk, uv = local_reduce_repeated(keys, vals, keys.shape[0], rep)
-    # one-sided put: bucket by owner hash and push this chunk
-    bk, bv, counts, (ofk, ofv) = bucketize(uk, uv, P, cap)
+    # one-sided put: bucket by the carried owner map (hash rule by
+    # default; a skew-aware map from core/partition.py otherwise) and
+    # push this chunk
+    owners = lookup_owner(carry.owner_map, carry.owner_split, uk,
+                          task_id, P)
+    bk, bv, counts, (ofk, ofv) = bucketize(uk, uv, P, cap, owners=owners)
     rk = all_to_all_blocks(bk, AXIS)
     rv = all_to_all_blocks(bv, AXIS)
     # Phase III (incremental Reduce): fold the *previous* step's chunk while
@@ -147,9 +152,11 @@ def _engine(spec: JobSpec, map_fn: Callable, tokens, task_ids, repeats):
         carry, _ = lax.scan(partial(_step, spec, map_fn), carry,
                             (tokens, task_ids, repeats))
     carry = _drain(carry)
-    # Combine (phase IV): sorted merge tree
-    keys, vals = combine_records(carry.table, spec)
-    keys, vals = tree_combine(keys, vals, AXIS, spec.n_procs)
+    # Combine (phase IV): sorted merge tree (run_job is the legacy
+    # blocking path — the Job API's segmented fin surfaces the overflow
+    # count; here an undersized combine_capacity still truncates)
+    keys, vals, overflow = combine_records(carry.table, spec)
+    keys, vals, _ = tree_combine(keys, vals, AXIS, spec.n_procs, overflow)
     return keys[None], vals[None]
 
 
@@ -199,8 +206,8 @@ class OneSidedBackend:
 
         def fin(carry):
             carry = _drain(carry)
-            keys, vals = combine_records(carry.table, spec)
-            return tree_combine(keys, vals, AXIS, spec.n_procs)
+            keys, vals, overflow = combine_records(carry.table, spec)
+            return tree_combine(keys, vals, AXIS, spec.n_procs, overflow)
 
         return wrap_segment_fns(mesh, spec, seg, fin)
 

@@ -1,0 +1,236 @@
+"""Skew-aware reduce partitioning — pluggable key→owner assignment.
+
+The paper owns each key by ``hash(key) % P`` (core/kv.py:owner_of),
+which spreads *keys* uniformly but not *records*: a Zipf-skewed key
+distribution — WordCount on natural text — floods one owner's window,
+overflows its push buckets and shifts work into ownership transfer and
+the Combine tree. Fan et al. (arXiv:1401.0355) and OS4M
+(arXiv:1406.3901) both balance the *observed* key distribution instead;
+this module brings that into the engines as a first-class subsystem:
+
+  * :class:`Partitioner` — the protocol: ``build(hist, n_procs)``
+    returns a dense **owner map** (``owner_map[key] -> rank``) plus a
+    **split map** (``owner_split[key] = k`` replicas for hot keys).
+  * :class:`HashPartitioner` — today's behavior, materialized as a
+    dense map (``owner_of(arange(vocab), P)``), bit-identical to the
+    modulo rule. The default.
+  * :class:`SampledPartitioner` — greedy LPT bin-packing of the keys
+    observed in a planner pre-pass (a histogram over a few sampled
+    tasks, read through the job's own :class:`~repro.data.feed.
+    SegmentFeed` so the bytes land in its stats). Keys never seen in
+    the sample keep their hash owner, so the map is total.
+  * **Hot-key splitting** (``SampledPartitioner(split=True)``): a key
+    heavier than a fraction of the per-rank target load is assigned
+    ``k > 1`` consecutive owners; mappers pick a replica by (mixed)
+    task id. Exactness is free — the Combine tree's dup-sum already
+    merges split partials, the same argument that makes ownership
+    transfer and work stealing locality-independent.
+
+The owner/split maps ride :class:`~repro.core.windows.EngineCarry`
+(not the jitted program), so one compiled engine serves every map, a
+checkpoint snapshots the map for free, and restore rejects a
+partitioner mismatch exactly like the ``stealing`` flag.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Protocol, Tuple, Union, runtime_checkable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kv import KEY_SENTINEL, mix32, owner_of
+
+
+@runtime_checkable
+class Partitioner(Protocol):
+    """Key→owner assignment strategy for the reduce side."""
+
+    name: str
+    needs_sample: bool      # True -> submit runs the planner pre-pass
+
+    def build(self, hist: np.ndarray,
+              n_procs: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(owner_map, owner_split) int32 arrays of shape (vocab,).
+
+        ``hist[key]`` is the sampled load proxy (tasks containing the
+        key — each task pushes at most one record per key, so task
+        presence, not raw frequency, is the records-per-owner load).
+        """
+        ...
+
+
+def hash_owner_map(vocab: int, n_procs: int) -> np.ndarray:
+    """The paper's modulo rule as a dense map — bit-identical to
+    ``owner_of`` on every key in [0, vocab)."""
+    return np.asarray(owner_of(jnp.arange(vocab, dtype=jnp.int32),
+                               n_procs), np.int32)
+
+
+@dataclass(frozen=True)
+class HashPartitioner:
+    """Static ``hash(key) % P`` — the default, zero pre-pass cost."""
+
+    name = "hash"
+    needs_sample = False
+
+    def build(self, hist, n_procs: int):
+        vocab = len(hist)
+        return hash_owner_map(vocab, n_procs), np.ones((vocab,), np.int32)
+
+
+@dataclass(frozen=True)
+class SampledPartitioner:
+    """Balanced owner map from a sampled key histogram.
+
+    Greedy LPT: observed keys, heaviest first, each to the currently
+    least-loaded rank. With ``split=True`` a key heavier than
+    ``split_threshold`` × (total/P) is divided across
+    ``k = ceil(load / threshold)`` consecutive ranks (capped at
+    ``max_split`` or P); the base rank is chosen to minimize the
+    resulting max load. Unobserved keys keep their hash owner.
+    """
+
+    sample_tasks: int = 16
+    split: bool = False
+    max_split: int = 0            # 0 -> n_procs
+    split_threshold: float = 0.5  # fraction of the per-rank target load
+
+    needs_sample = True
+
+    @property
+    def name(self) -> str:
+        return "sampled+split" if self.split else "sampled"
+
+    def build(self, hist, n_procs: int):
+        hist = np.asarray(hist, np.float64)
+        vocab = len(hist)
+        omap = hash_owner_map(vocab, n_procs)
+        osplit = np.ones((vocab,), np.int32)
+        total = float(hist.sum())
+        if total <= 0 or n_procs <= 1:
+            return omap, osplit
+        omap = omap.copy()
+        load = np.zeros((n_procs,), np.float64)
+        order = np.argsort(-hist, kind="stable")
+        order = order[hist[order] > 0]
+        chunk = max(self.split_threshold * total / n_procs, 1.0)
+        cap = self.max_split or n_procs
+        for key in order.tolist():
+            c = float(hist[key])
+            k = min(cap, int(np.ceil(c / chunk))) if self.split else 1
+            if k > 1:
+                share = c / k
+                spans = np.array([[(b + j) % n_procs for j in range(k)]
+                                  for b in range(n_procs)])
+                base = int(np.argmin(load[spans].max(axis=1) + share))
+                omap[key], osplit[key] = base, k
+                load[spans[base]] += share
+            else:
+                b = int(np.argmin(load))
+                omap[key] = b
+                load[b] += c
+        return omap, osplit
+
+
+_NAMED = {
+    "hash": HashPartitioner(),
+    "sampled": SampledPartitioner(),
+    "sampled+split": SampledPartitioner(split=True),
+}
+
+
+def available_partitioners():
+    return sorted(_NAMED)
+
+
+def resolve_partitioner(p: Union[str, Partitioner]) -> Partitioner:
+    """Name or instance -> instance, with a clear error on unknowns."""
+    if isinstance(p, str):
+        if p not in _NAMED:
+            raise ValueError(f"unknown partitioner {p!r}; available: "
+                             f"{available_partitioners()} (or pass a "
+                             "Partitioner instance)")
+        return _NAMED[p]
+    if not isinstance(p, Partitioner):
+        raise TypeError(f"not a Partitioner: {p!r}")
+    return p
+
+
+# ---------------------------------------------------------------------------
+# planner pre-pass: sampled key histogram
+# ---------------------------------------------------------------------------
+
+def sample_key_histogram(read_tasks_fn, plan, usecase, n_sample: int,
+                         window: int = 0) -> np.ndarray:
+    """Histogram the keys of up to ``n_sample`` tasks spread evenly over
+    the input — the load proxy :meth:`Partitioner.build` consumes.
+
+    ``read_tasks_fn(ids)`` serves token blocks by global task id (pass
+    ``feed.sample_tasks`` so the read lands in the feed's stats); the
+    use-case's ``map_emit`` runs per sampled task, and each task counts
+    every distinct key it emits once (a task pushes at most one record
+    per key after its local reduce). ``window`` sizes the histogram —
+    pass the *engine's* window (``JobSpec.vocab``, which a
+    ``JobConfig(window=...)`` override may widen past
+    ``usecase.window``) so the owner map built from it matches the
+    carry's shape; 0 falls back to ``usecase.window``.
+    """
+    sent = int(KEY_SENTINEL)
+    window = int(window) or usecase.window
+    hist = np.zeros((window,), np.int64)
+    if plan.n_tasks <= 0:
+        return hist
+    n = max(1, min(int(n_sample), plan.n_tasks))
+    ids = np.unique(np.linspace(0, plan.n_tasks - 1, n).round()
+                    .astype(np.int64)).astype(np.int32)
+    tokens = read_tasks_fn(ids)
+    for i, t in enumerate(ids.tolist()):
+        keys = np.asarray(usecase.map_emit(jnp.asarray(tokens[i]),
+                                           jnp.int32(t))[0])
+        keys = keys[(keys != sent) & (keys >= 0) & (keys < window)]
+        np.add.at(hist, np.unique(keys), 1)
+    return hist
+
+
+# ---------------------------------------------------------------------------
+# device side: owner lookup (runs inside the engines' scan)
+# ---------------------------------------------------------------------------
+
+def lookup_owner(owner_map: jnp.ndarray, owner_split: jnp.ndarray,
+                 keys: jnp.ndarray, task_id: jnp.ndarray,
+                 n_procs: int) -> jnp.ndarray:
+    """Owner of each key under a dense (owner_map, owner_split) pair.
+
+    Split keys (``owner_split[key] = k > 1``) resolve to one of the k
+    consecutive replica ranks ``(base + j) % P``, picked by the mixed
+    task id — every mapper working task t agrees, different tasks
+    spread across replicas. Invalid keys (sentinel / out of window) map
+    to the ghost owner ``n_procs``, same as :func:`~repro.core.kv.
+    bucketize`'s own masking.
+    """
+    vocab = owner_map.shape[0]
+    valid = (keys != KEY_SENTINEL) & (keys >= 0) & (keys < vocab)
+    idx = jnp.where(valid, keys, 0)
+    base = owner_map[idx]
+    k = jnp.maximum(owner_split[idx], 1)
+    pick = (mix32(task_id.astype(jnp.uint32))
+            % k.astype(jnp.uint32)).astype(jnp.int32)
+    owner = (base + jnp.where(k > 1, pick, 0)) % jnp.int32(n_procs)
+    return jnp.where(valid, owner, jnp.int32(n_procs))
+
+
+def owner_loads(hist: np.ndarray, owner_map: np.ndarray,
+                owner_split: np.ndarray, n_procs: int) -> np.ndarray:
+    """Expected records per owner under a map — the reduce-side load
+    model fig10 and the balance tests share. Split keys contribute
+    ``hist/k`` to each of their k replica ranks."""
+    hist = np.asarray(hist, np.float64)
+    load = np.zeros((n_procs,), np.float64)
+    keys = np.nonzero(hist > 0)[0]
+    for key in keys.tolist():
+        k = max(int(owner_split[key]), 1)
+        share = hist[key] / k
+        for j in range(k):
+            load[(int(owner_map[key]) + j) % n_procs] += share
+    return load

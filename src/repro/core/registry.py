@@ -19,7 +19,7 @@ of the backend interface, shared by every engine.
 from __future__ import annotations
 
 import importlib
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable, Dict, Protocol, Tuple, runtime_checkable
 
 # built-in engines register lazily on first resolution so importing the
@@ -45,6 +45,13 @@ class JobSpec:
     stealing: bool = False       # device-side work stealing (core/steal.py);
                                  #   only engines advertising
                                  #   ``supports_stealing`` honor it
+    # reduce-side key→owner strategy name (core/partition.py). The owner
+    # map itself is CARRY DATA, so the compiled program is identical for
+    # every partitioner — compare=False keeps this provenance tag out of
+    # eq/hash and therefore out of the backends' jit-program memo keys
+    # (one compiled engine really does serve every map); checkpoint
+    # compat checks read the attribute directly.
+    partitioner: str = field(default="hash", compare=False)
 
     def __post_init__(self):
         if not self.combine_capacity:

@@ -33,13 +33,15 @@ from jax import lax
 
 from repro.core.combine import tree_combine
 from repro.core.kv import local_reduce_repeated, bucketize
+from repro.core.partition import lookup_owner
 from repro.core.registry import JobSpec, memoized, register_backend
 from repro.core.windows import (AXIS, DenseWindow, combine_records,
                                 init_carry, wrap_segment_fns)
 from repro.distributed.collectives import all_to_all_blocks, shard_map
 
 
-def _map_all(spec: JobSpec, map_fn: Callable, tokens, task_ids, repeats):
+def _map_all(spec: JobSpec, map_fn: Callable, tokens, task_ids, repeats,
+             owner_map, owner_split):
     """The bulk Map phase over a task grid: every task's buckets are
     buffered before anything is sent (the 2S memory spike)."""
     P, cap = spec.n_procs, spec.push_cap
@@ -51,7 +53,9 @@ def _map_all(spec: JobSpec, map_fn: Callable, tokens, task_ids, repeats):
         # same repeated task compute as MR-1S (the engines share the Map /
         # Local Reduce mechanics by design — paper §2.2.1)
         uk, uv = local_reduce_repeated(keys, vals, keys.shape[0], rep)
-        bk, bv, counts, (ofk, ofv) = bucketize(uk, uv, P, cap)
+        owners = lookup_owner(owner_map, owner_split, uk, tid, P)
+        bk, bv, counts, (ofk, ofv) = bucketize(uk, uv, P, cap,
+                                               owners=owners)
         return None, (bk, bv, ofk, ofv)
 
     _, (BK, BV, OFK, OFV) = lax.scan(map_one, None,
@@ -71,13 +75,19 @@ def _shuffle_reduce(win: DenseWindow, BK, BV, OFK, OFV) -> DenseWindow:
 
 
 def _engine(spec: JobSpec, map_fn: Callable, tokens, task_ids, repeats):
+    from repro.core.kv import owner_of
     tokens, task_ids, repeats = tokens[0], task_ids[0], repeats[0]
-    BK, BV, OFK, OFV = _map_all(spec, map_fn, tokens, task_ids, repeats)
+    # legacy blocking path: always the hash rule (the Job API's segmented
+    # path carries skew-aware maps in the EngineCarry)
+    omap = owner_of(jnp.arange(spec.vocab, dtype=jnp.int32), spec.n_procs)
+    osplit = jnp.ones((spec.vocab,), jnp.int32)
+    BK, BV, OFK, OFV = _map_all(spec, map_fn, tokens, task_ids, repeats,
+                                omap, osplit)
     win = DenseWindow(jnp.zeros((spec.vocab,), jnp.int32))
     win = _shuffle_reduce(win, BK, BV, OFK, OFV)
     # ---- Combine ----------------------------------------------------------
-    keys, vals = combine_records(win.table, spec)
-    keys, vals = tree_combine(keys, vals, AXIS, spec.n_procs)
+    keys, vals, overflow = combine_records(win.table, spec)
+    keys, vals, _ = tree_combine(keys, vals, AXIS, spec.n_procs, overflow)
     return keys[None], vals[None]
 
 
@@ -109,15 +119,16 @@ class TwoSidedBackend:
 
     def _build_segment_fns(self, spec: JobSpec, map_fn: Callable, mesh):
         def seg(carry, tok, tid, rep):
-            BK, BV, OFK, OFV = _map_all(spec, map_fn, tok, tid, rep)
+            BK, BV, OFK, OFV = _map_all(spec, map_fn, tok, tid, rep,
+                                        carry.owner_map, carry.owner_split)
             win = _shuffle_reduce(DenseWindow(carry.table), BK, BV,
                                   OFK, OFV)
             return carry._replace(table=win.table,
                                   cursor=carry.cursor + tok.shape[0])
 
         def fin(carry):
-            keys, vals = combine_records(carry.table, spec)
-            return tree_combine(keys, vals, AXIS, spec.n_procs)
+            keys, vals, overflow = combine_records(carry.table, spec)
+            return tree_combine(keys, vals, AXIS, spec.n_procs, overflow)
 
         return wrap_segment_fns(mesh, spec, seg, fin)
 

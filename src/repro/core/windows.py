@@ -102,9 +102,18 @@ class EngineCarry(NamedTuple):
     # ride the carry so checkpoints capture mid-job claim state for free.
     work: jnp.ndarray        # (P,) int32 progress row
     stolen: jnp.ndarray      # (P,) int32 steal counters
+    # reduce-side partitioning state (core/partition.py): the dense
+    # key→owner map and per-key replica counts, replicated per rank.
+    # Riding the carry (not the jitted program) means one compiled
+    # engine serves every owner map, and a checkpoint snapshots the
+    # map for free — restore resumes with the exact assignment that
+    # produced the windows.
+    owner_map: jnp.ndarray   # (vocab,) int32 key -> base owner rank
+    owner_split: jnp.ndarray  # (vocab,) int32 replicas per key (>= 1)
 
 
 def init_carry(spec) -> EngineCarry:
+    from repro.core.kv import owner_of
     from repro.distributed.collectives import pvary
     P, cap = spec.n_procs, spec.push_cap
     return pvary(EngineCarry(
@@ -115,18 +124,28 @@ def init_carry(spec) -> EngineCarry:
         cursor=jnp.int32(0),
         work=jnp.zeros((P,), jnp.int32),
         stolen=jnp.zeros((P,), jnp.int32),
+        # the hash rule as a dense map — bit-identical to owner_of, and
+        # the seed a skew-aware partitioner overwrites before step 0
+        owner_map=owner_of(jnp.arange(spec.vocab, dtype=jnp.int32), P),
+        owner_split=jnp.ones((spec.vocab,), jnp.int32),
     ), AXIS)
 
 
 def combine_records(table: jnp.ndarray, spec):
     """Window -> sorted records entering the Combine tree, honoring
-    ``spec.combine_capacity`` identically in every backend and mode."""
+    ``spec.combine_capacity`` identically in every backend and mode.
+
+    Returns ``(keys, vals, overflow)``: ``overflow`` counts the records
+    this rank *lost* squeezing its window into the Combine width W (0
+    whenever W covers the window — truncation is never silent)."""
     from repro.core.kv import local_reduce
     keys, vals = DenseWindow(table).to_records(None, spec.n_procs)
     W = spec.combine_capacity
+    overflow = jnp.int32(0)
     if W != keys.shape[0]:
-        keys, vals, _ = local_reduce(keys, vals, W)
-    return keys, vals
+        keys, vals, n_unique = local_reduce(keys, vals, W)
+        overflow = jnp.maximum(n_unique.astype(jnp.int32) - W, 0)
+    return keys, vals, overflow
 
 
 def wrap_segment_fns(mesh, spec, seg_body, fin_body):
@@ -158,7 +177,8 @@ def wrap_segment_fns(mesh, spec, seg_body, fin_body):
     fin_sm = jax.jit(shard_map(
         lambda c: tuple(
             x[None] for x in fin_body(jax.tree.map(lambda x: x[0], c))),
-        mesh=mesh, in_specs=(carry_specs,), out_specs=(spec_p, spec_p)))
+        mesh=mesh, in_specs=(carry_specs,),
+        out_specs=(spec_p, spec_p, spec_p)))
     init_sm = jax.jit(shard_map(
         lambda: init(), mesh=mesh, in_specs=(), out_specs=carry_specs))
     return init_sm, seg_sm, fin_sm

@@ -46,6 +46,9 @@ class FeedStats:
     prefetch_hits: int = 0       # segments served from the background read
     prefetch_misses: int = 0     # segments built synchronously
     max_live_bytes: int = 0      # high-water mark of feed-held host bytes
+    sample_tasks_read: int = 0   # tasks read by a partitioner pre-pass
+                                 #   (core/partition.py) — their bytes are
+                                 #   included in bytes_read
     _live: dict = field(default_factory=dict, repr=False)
 
     def _track(self, key, nbytes: int):
@@ -124,6 +127,15 @@ class SegmentFeed:
         tokens = read_tasks(self.source, self.plan, task_ids)
         with self._stats_lock:
             self.stats.bytes_read += tokens.nbytes
+        return tokens
+
+    def sample_tasks(self, task_ids) -> np.ndarray:
+        """:meth:`read_tasks` for a partitioner's sampling pre-pass —
+        same pure by-global-id read, separately accounted so a job's
+        stats show what the skew sample cost."""
+        tokens = self.read_tasks(task_ids)
+        with self._stats_lock:
+            self.stats.sample_tasks_read += int(np.asarray(task_ids).size)
         return tokens
 
     # -- segment construction ----------------------------------------------

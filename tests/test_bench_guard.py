@@ -22,6 +22,15 @@ FIG9 = {
     "steal_overhead_pct_worst": 6.0,
     "criteria": {"steal_beats_2s_at_max_skew": True, "oracle_exact": True},
 }
+FIG10 = {
+    "model": {"rows": [{"a": 2.2, "per_part": {}}]},
+    "real": {"per_skew": {"2.2": {}}},
+    "partitioner_overhead_pct_worst": 3.0,
+    "criteria": {"sampled_beats_hash_at_max_skew": True,
+                 "split_beats_hash_at_max_skew": True,
+                 "win_split_vs_hash_reduce_pct": 70.0,
+                 "oracle_exact": True},
+}
 
 
 @pytest.fixture()
@@ -31,13 +40,17 @@ def dirs(tmp_path):
     results.mkdir()
     baseline.mkdir()
 
-    def write(fig8=FIG8, fig9=FIG9, fresh_fig8=None, fresh_fig9=None):
+    def write(fig8=FIG8, fig9=FIG9, fig10=FIG10, fresh_fig8=None,
+              fresh_fig9=None, fresh_fig10=None):
         (baseline / "BENCH_io_overlap.json").write_text(json.dumps(fig8))
         (baseline / "BENCH_imbalance.json").write_text(json.dumps(fig9))
+        (baseline / "BENCH_keyskew.json").write_text(json.dumps(fig10))
         (results / "fig8_io_overlap.json").write_text(
             json.dumps(fresh_fig8 if fresh_fig8 is not None else fig8))
         (results / "fig9_imbalance.json").write_text(
             json.dumps(fresh_fig9 if fresh_fig9 is not None else fig9))
+        (results / "fig10_keyskew.json").write_text(
+            json.dumps(fresh_fig10 if fresh_fig10 is not None else fig10))
 
     return str(results), str(baseline), write
 
@@ -47,7 +60,8 @@ def test_clean_artifacts_pass(dirs):
     write()
     assert check("fig8", results, baseline) == []
     assert check("fig9", results, baseline) == []
-    assert main(["fig8", "fig9", "--results", results,
+    assert check("fig10", results, baseline) == []
+    assert main(["fig8", "fig9", "fig10", "--results", results,
                  "--baseline", baseline]) == 0
 
 
@@ -95,3 +109,23 @@ def test_require_true_criteria_enforced(dirs):
     write(fresh_fig9=lost)
     errs = check("fig9", results, baseline)
     assert any("expected true" in e for e in errs)
+
+
+def test_fig10_gates(dirs):
+    """The key-skew guard: win may shrink at most 40pp below baseline
+    (70), exactness and both beats-hash criteria are hard-required."""
+    results, baseline, write = dirs
+    ok = copy.deepcopy(FIG10)
+    ok["criteria"]["win_split_vs_hash_reduce_pct"] = 45.0   # within 40pp
+    write(fresh_fig10=ok)
+    assert check("fig10", results, baseline) == []
+    bad = copy.deepcopy(FIG10)
+    bad["criteria"]["win_split_vs_hash_reduce_pct"] = 20.0  # breach
+    write(fresh_fig10=bad)
+    assert any("win_split_vs_hash_reduce_pct" in e
+               for e in check("fig10", results, baseline))
+    inexact = copy.deepcopy(FIG10)
+    inexact["criteria"]["oracle_exact"] = False
+    write(fresh_fig10=inexact)
+    assert any("oracle_exact" in e and "expected true" in e
+               for e in check("fig10", results, baseline))

@@ -213,18 +213,81 @@ def test_tree_combine_multiproc_sorted_merge(devices8):
                 oracle[int(k)] = oracle.get(int(k), 0) + p + 1
 
         def body(k, v):
-            kk, vv = tree_combine(k[0], v[0], "procs", 8)
-            return kk[None], vv[None]
+            kk, vv, of = tree_combine(k[0], v[0], "procs", 8)
+            return kk[None], vv[None], of[None]
 
         fn = jax.jit(shard_map(body, mesh=mesh,
                                in_specs=(P("procs"), P("procs")),
-                               out_specs=(P("procs"), P("procs"))))
-        ok, ov = fn(keys, vals)
+                               out_specs=(P("procs"), P("procs"),
+                                          P("procs"))))
+        ok, ov, of = fn(keys, vals)
         ok, ov = np.asarray(ok)[0], np.asarray(ov)[0]
         valid = ok != int(KEY_SENTINEL)
         got = dict(zip(ok[valid].tolist(), ov[valid].tolist()))
         assert got == oracle
         assert (np.diff(ok[valid]) > 0).all()
+        # W covers the union: the overflow counter must stay 0 (and be
+        # identical on every rank — it is psum-replicated)
+        assert (np.asarray(of) == 0).all()
         print("COMBINE-OK")
     """)
     assert "COMBINE-OK" in out
+
+
+def test_tree_combine_overflow_detected_at_merge_levels(devices8):
+    """Satellite bugfix: two full W-wide runs whose key union exceeds W
+    used to be truncated to W at each level with the loss vanishing at
+    the next — the overflow must now surface, counted globally. Both the
+    raw tree (disjoint per-rank runs => every merge overflows) and the
+    Job API path (per-rank windows fit combine_capacity, the union does
+    not => overflow arises ONLY inside the tree) are pinned."""
+    out = devices8("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.core.combine import tree_combine
+        from repro.core.kv import KEY_SENTINEL
+        from repro.distributed.collectives import shard_map
+        from repro.distributed.mesh import local_mesh
+
+        mesh = local_mesh((8,), ("procs",))
+        W = 16
+        # 8 disjoint full runs: rank p owns keys [p*W, (p+1)*W)
+        keys = (np.arange(8 * W, dtype=np.int32).reshape(8, W))
+        vals = np.ones((8, W), np.int32)
+
+        def body(k, v):
+            kk, vv, of = tree_combine(k[0], v[0], "procs", 8)
+            return kk[None], vv[None], of[None]
+
+        fn = jax.jit(shard_map(body, mesh=mesh,
+                               in_specs=(P("procs"), P("procs")),
+                               out_specs=(P("procs"), P("procs"),
+                                          P("procs"))))
+        ok, ov, of = fn(keys, vals)
+        of = np.asarray(of)
+        # merges: 4+2+1 = 7, each unions 2W unique keys into W -> W lost
+        assert (of == 7 * W).all(), of          # replicated global count
+        ok0 = np.asarray(ok)[0]
+        assert (ok0 == np.arange(W)).all()      # smallest W keys survive
+
+        # Job API: per-rank windows fit W, only the tree overflows
+        from repro.core import (CombineOverflowError, JobConfig, submit,
+                                wordcount_oracle)
+        from repro.core.usecases import WordCount
+        VOCAB = 256
+        toks = np.tile(np.arange(VOCAB, dtype=np.int32), 32)  # all keys hot
+        oracle = wordcount_oracle(toks, VOCAB)
+        cfg = JobConfig(usecase=WordCount(vocab=VOCAB), backend="1s",
+                        task_size=512, push_cap=512, n_procs=8,
+                        combine_capacity=64)
+        h = submit(cfg, toks)
+        try:
+            h.result()
+            raise SystemExit("no overflow raised")
+        except CombineOverflowError as e:
+            assert e.result.combine_overflow > 0
+            assert e.result.records != oracle   # pre-fix silent wrongness
+            assert len(e.result.records) <= 64
+        print("TREE-OVERFLOW-OK")
+    """)
+    assert "TREE-OVERFLOW-OK" in out

@@ -150,14 +150,82 @@ def test_inverted_index_oracle(tokens, backend, segment):
 def test_combine_capacity_consistent_across_modes(tokens, backend):
     """A non-default Combine window must produce identical records in
     oneshot and segmented mode (it used to be honored only by the 1s
-    oneshot path)."""
+    oneshot path). VOCAB=200 keys all occur, so 256 is the smallest
+    power-of-two capacity that does NOT overflow — see the overflow
+    tests below for the undersized case, which now raises."""
     cfg = JobConfig(usecase=WordCount(vocab=VOCAB), backend=backend,
                     task_size=TASK, push_cap=256, n_procs=1,
-                    combine_capacity=128)
+                    combine_capacity=256)
     oneshot = submit(cfg, tokens).result()
     seg = submit(dataclasses.replace(cfg, segment=4), tokens).result()
     assert oneshot.records == seg.records
-    assert len(oneshot.records) <= 128
+    assert oneshot.combine_overflow == 0
+    assert oneshot.records == wordcount_oracle(tokens, VOCAB)
+
+
+@pytest.mark.parametrize("backend", ["1s", "2s"])
+def test_combine_overflow_raises_not_silent(tokens, backend):
+    """THE headline bugfix: an undersized combine_capacity used to
+    *silently drop* every key past the capacity — result() returned
+    wrong counts with no signal. It must now raise, carrying the
+    overflow count and the (wrong) partial result for inspection."""
+    from repro.core import CombineOverflowError
+    oracle = wordcount_oracle(tokens, VOCAB)
+    cfg = JobConfig(usecase=WordCount(vocab=VOCAB), backend=backend,
+                    task_size=TASK, push_cap=256, n_procs=1,
+                    combine_capacity=128)
+    h = submit(cfg, tokens)
+    with pytest.raises(CombineOverflowError, match="combine_capacity"):
+        h.result()
+    # the attached partial result is the pre-fix behavior: provably wrong
+    try:
+        h.result()                          # raises again — never silent
+    except CombineOverflowError as e:
+        assert e.result.combine_overflow > 0
+        assert e.result.records != oracle   # pre-fix counts WERE wrong
+        assert sum(e.result.records.values()) < sum(oracle.values())
+        # exactly the dropped tail is accounted for
+        assert (len(oracle) - len(e.result.records)
+                == e.result.combine_overflow)
+    assert h.feed._closed                   # stream was still torn down
+
+
+def test_result_closes_feed_on_engine_error(tokens):
+    """A raising segment/finish fn must not leak the feed's prefetch
+    thread: result() closes the feed on every exit path."""
+    @dataclasses.dataclass(frozen=True)
+    class Broken:
+        vocab: int
+
+        @property
+        def window(self):
+            return self.vocab
+
+        def map_emit(self, toks, task_id):
+            raise ValueError("boom at trace time")
+
+    cfg = JobConfig(usecase=Broken(vocab=VOCAB), backend="1s",
+                    task_size=TASK, push_cap=256, n_procs=1)
+    h = submit(cfg, tokens)
+    with pytest.raises(ValueError, match="boom"):
+        h.result()
+    assert h.feed._closed                   # used to stay open forever
+
+
+def test_jobhandle_context_manager(tokens):
+    """``with submit(...) as h`` releases the feed even when the body
+    abandons the job mid-stream (no result() ever called)."""
+    cfg = JobConfig(usecase=WordCount(vocab=VOCAB), backend="1s",
+                    task_size=TASK, push_cap=256, n_procs=1, segment=2)
+    with submit(cfg, tokens) as h:
+        h.step()
+        assert not h.feed._closed
+    assert h.feed._closed
+    # and the normal full-lifecycle use still works inside the block
+    with submit(cfg, tokens) as h2:
+        assert h2.result().records == wordcount_oracle(tokens, VOCAB)
+    assert h2.feed._closed
+    h2.close()                              # idempotent
 
 
 def test_custom_usecase_with_local_reduce_combiner(tokens):
