@@ -29,9 +29,13 @@ except ImportError:                      # invoked as a script from benchmarks/
     from common import REPO
 
 # per-benchmark contract: fresh artifact name, committed baseline name,
-# required keys (dotted paths), and (metric, direction, tolerance) gates.
+# required keys (dotted paths), (metric, direction, tolerance) gates, and
+# absolute (metric, floor) floors.
 # Directions: "min" -> fresh may not drop more than `tol` below baseline;
-# "max" -> fresh may not rise more than `tol` above baseline.
+# "max" -> fresh may not rise more than `tol` above baseline. Floors are
+# baseline-independent: the fresh value must be >= the stated minimum
+# (for scale-free metrics like a fairness index, where "worse than the
+# baseline by N" is the wrong question).
 CHECKS: Dict[str, Dict] = {
     "fig8": {
         "fresh": "fig8_io_overlap.json",
@@ -84,6 +88,36 @@ CHECKS: Dict[str, Dict] = {
                          "criteria.split_beats_hash_at_max_skew",
                          "criteria.oracle_exact"],
     },
+    "fig11": {
+        "fresh": "fig11_multitenant.json",
+        "baseline": "BENCH_multitenant.json",
+        "required": ["per_k", "criteria.max_K",
+                     "criteria.fairshare_p95_win_pct",
+                     "criteria.fair_vs_fifo_makespan_pct",
+                     "criteria.jain_fair",
+                     "criteria.all_jobs_exact"],
+        "gates": [
+            # fair share's p95-latency win over FIFO may shrink vs the
+            # committed trajectory by at most 35 percentage points (the
+            # smoke fleet is much smaller — K=8 vs 16 — so its win is
+            # structurally lower; only a collapse to ~FIFO is signal)
+            ("criteria.fairshare_p95_win_pct", "min", 35.0),
+            # segment-granular slicing must stay ~free: the fair fleet's
+            # makespan may not balloon past FIFO's by 25 points more
+            # than the committed baseline shows
+            ("criteria.fair_vs_fifo_makespan_pct", "max", 25.0),
+        ],
+        "floors": [
+            # absolute fairness floor — Jain index of per-job normalized
+            # service under fair share (FIFO sits near 1/K; a fair
+            # scheduler that drops under 0.3 is broken regardless of
+            # what the baseline says)
+            ("criteria.jain_fair", 0.30),
+        ],
+        "require_true": ["criteria.all_jobs_exact",
+                         "criteria.fair_jain_beats_fifo",
+                         "criteria.priority_favors_high"],
+    },
 }
 
 
@@ -111,6 +145,13 @@ def check(name: str, results_dir: str, baseline_dir: str) -> List[str]:
         if dig(fresh, key) is not True:
             errors.append(f"{name}: {key} is {dig(fresh, key)!r}, "
                           "expected true")
+    for metric, floor in spec.get("floors", []):
+        got = dig(fresh, metric)
+        if got is None:
+            errors.append(f"{name}: floor metric {metric!r} absent")
+        elif got < floor:
+            errors.append(f"{name}: {metric} below floor: "
+                          f"{got:.2f} < {floor}")
     if not os.path.isfile(base_path):
         errors.append(f"{name}: committed baseline {base_path} missing")
         return errors

@@ -1,1 +1,1 @@
-from repro.ckpt.checkpoint import CheckpointManager
+from repro.ckpt.checkpoint import CheckpointManager, FleetCheckpoint

@@ -152,3 +152,73 @@ class CheckpointManager:
     def wait(self):
         self._pool.shutdown(wait=True)
         self._pool = ThreadPoolExecutor(max_workers=1)
+
+
+class FleetCheckpoint:
+    """Scheduler-level checkpoint root: one :class:`CheckpointManager`
+    per job (``<dir>/job-<name>/``) plus a queue-state manifest
+    (``fleet.json``, atomic rename commit).
+
+    A fleet snapshot is *the set of per-job snapshots + the scheduler's
+    queue state* (admission order, tenants, priorities, accounting) —
+    ``repro.core.scheduler.JobScheduler.checkpoint/restore`` is the
+    front door. Finished jobs' results are not persisted: on restore
+    they resume from their latest per-job snapshot (or from scratch if
+    none was ever taken), which only re-runs work *after* that snapshot.
+    """
+
+    STATE = "fleet.json"
+
+    def __init__(self, directory: str, keep: int = 2):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._managers: Dict[str, CheckpointManager] = {}
+
+    @staticmethod
+    def _safe(name: str) -> str:
+        safe = "".join(c if c.isalnum() or c in "-_." else "_"
+                       for c in name)
+        if safe == name:
+            return safe
+        # sanitization is lossy ("job/1" and "job_1" both map to
+        # "job_1") — a stable digest of the raw name keeps two distinct
+        # jobs from silently sharing one snapshot directory, while
+        # restore (which re-derives the path from the same name)
+        # still finds it
+        import hashlib
+        digest = hashlib.sha1(name.encode()).hexdigest()[:8]
+        return f"{safe}-{digest}"
+
+    def manager(self, name: str) -> CheckpointManager:
+        """The per-job CheckpointManager (created on first use)."""
+        if name not in self._managers:
+            self._managers[name] = CheckpointManager(
+                os.path.join(self.dir, f"job-{self._safe(name)}"),
+                keep=self.keep)
+        return self._managers[name]
+
+    def has_snapshot(self, name: str) -> bool:
+        d = os.path.join(self.dir, f"job-{self._safe(name)}")
+        return (os.path.isdir(d)
+                and self.manager(name).latest_step() is not None)
+
+    def save_state(self, state: Dict) -> str:
+        tmp = os.path.join(self.dir, ".fleet.tmp")
+        final = os.path.join(self.dir, self.STATE)
+        with open(tmp, "w") as f:
+            json.dump(state, f, indent=1)
+        os.replace(tmp, final)               # atomic commit
+        return final
+
+    def load_state(self) -> Dict:
+        path = os.path.join(self.dir, self.STATE)
+        assert os.path.isfile(path), f"no fleet state in {self.dir}"
+        with open(path) as f:
+            return json.load(f)
+
+    def wait(self):
+        """Flush every job's async save — call before committing the
+        fleet manifest so it never references a torn snapshot."""
+        for m in self._managers.values():
+            m.wait()

@@ -11,6 +11,10 @@ from repro.core.partition import (HashPartitioner, Partitioner,
 from repro.core.registry import (Backend, JobSpec, UnknownBackendError,
                                  available_backends, get_backend,
                                  register_backend)
+from repro.core.scheduler import (AdmissionQueueFull, FairSharePolicy,
+                                  FifoPolicy, JobScheduler, PriorityPolicy,
+                                  SchedulePolicy, TenantStats,
+                                  available_policies, resolve_policy)
 from repro.core.usecase import UseCase, as_map_fn
 from repro.core.usecases import (Histogram, InvertedIndex, WordCount,
                                  histogram_oracle, inverted_index_oracle,

@@ -133,14 +133,17 @@ class CombineOverflowError(RuntimeError):
 
 
 def submit(config: JobConfig, dataset, *, mesh=None, repeats=None,
-           prefetch: bool = True) -> "JobHandle":
+           prefetch: bool = True, feed_budget=None) -> "JobHandle":
     """Plan ``dataset`` (a DataSource, or a 1-D int32 array auto-wrapped
     into one) onto the mesh and return a handle. Nothing executes — and
     nothing beyond one segment is read — until ``step()`` or ``result()``.
 
     ``repeats`` is the optional (n_procs, tasks_per_proc) compute-repeat
     grid — the paper's footnote-5 imbalance model. ``prefetch=False``
-    disables the background read (measurement baselines)."""
+    disables the background read (measurement baselines). ``feed_budget``
+    is an optional shared :class:`repro.data.feed.FeedBudget` bounding
+    the combined prefetch bytes of many live feeds (the multi-tenant
+    scheduler passes its arbiter here)."""
     backend = get_backend(config.backend)        # fail fast on bad names
     if config.stealing and not getattr(backend, "supports_stealing", False):
         raise ValueError(
@@ -170,7 +173,7 @@ def submit(config: JobConfig, dataset, *, mesh=None, repeats=None,
         source, plan, task_ids, repeats,
         segment=config.segment if config.segment > 0 else max(T, 1),
         sharding=NamedSharding(mesh, PartitionSpec(AXIS)),
-        prefetch=prefetch)
+        prefetch=prefetch, budget=feed_budget)
     return JobHandle(config, backend, spec, mesh, plan, feed, partitioner)
 
 
@@ -232,6 +235,15 @@ class JobHandle:
     @property
     def done(self) -> bool:
         return self._result is not None
+
+    def ready(self) -> bool:
+        """True when the next ``step()`` would not block on input I/O —
+        the feed's background read of the upcoming segment has landed
+        (or the stream is exhausted / the job is done). The cooperative
+        half of the scheduler contract: ``step()`` yields at segment
+        boundaries, ``ready()`` lets the scheduler poll many jobs' feeds
+        without blocking on any of them."""
+        return self._result is not None or self.feed.ready()
 
     @property
     def carry(self):

@@ -27,6 +27,13 @@ or re-planned widths.
 Peak host residency is O(segment): the feed holds at most the segment
 being consumed plus the one in flight (``stats.max_live_bytes`` is the
 evidence the memory-bound tests pin).
+
+With many jobs live at once (``repro.core.scheduler.JobScheduler``),
+N feeds prefetch concurrently; a shared :class:`FeedBudget` arbiter
+bounds their *combined* in-flight bytes so tenant prefetch cannot OOM
+the host. A denied reservation only skips the background read — the
+segment is built synchronously at consume time instead — so the budget
+can never deadlock a job, it only serializes its I/O.
 """
 from __future__ import annotations
 
@@ -49,6 +56,9 @@ class FeedStats:
     sample_tasks_read: int = 0   # tasks read by a partitioner pre-pass
                                  #   (core/partition.py) — their bytes are
                                  #   included in bytes_read
+    budget_denials: int = 0      # prefetches skipped because the shared
+                                 #   FeedBudget was exhausted (the segment
+                                 #   was built synchronously instead)
     _live: dict = field(default_factory=dict, repr=False)
 
     def _track(self, key, nbytes: int):
@@ -58,6 +68,49 @@ class FeedStats:
 
     def _release(self, key):
         self._live.pop(key, None)
+
+
+class FeedBudget:
+    """Shared in-flight-bytes arbiter across many live SegmentFeeds.
+
+    One scheduler-owned instance is passed to every feed it creates
+    (``submit(..., feed_budget=...)``); a feed must reserve the estimated
+    segment bytes before scheduling a *background* read. When the
+    combined reservations would exceed ``max_live_bytes`` the prefetch is
+    denied (counted in the feed's ``stats.budget_denials``) and the
+    segment is built synchronously at consume time — bounded host
+    memory, never a stalled job.
+
+    One reservation is always granted when nothing is held, so a single
+    oversized segment degrades to serialized prefetch instead of
+    disabling prefetch fleet-wide.
+    """
+
+    def __init__(self, max_live_bytes: int):
+        assert max_live_bytes > 0, "budget must be positive bytes"
+        self.max_live_bytes = int(max_live_bytes)
+        self._held: dict = {}
+        self._lock = threading.Lock()
+        self.denials = 0             # fleet-wide (per-feed copies in stats)
+
+    @property
+    def live_bytes(self) -> int:
+        with self._lock:
+            return sum(self._held.values())
+
+    def try_reserve(self, key, nbytes: int) -> bool:
+        with self._lock:
+            if (self._held
+                    and sum(self._held.values()) + nbytes
+                    > self.max_live_bytes):
+                self.denials += 1
+                return False
+            self._held[key] = int(nbytes)
+            return True
+
+    def release(self, key):
+        with self._lock:
+            self._held.pop(key, None)
 
 
 class SegmentFeed:
@@ -70,7 +123,8 @@ class SegmentFeed:
 
     def __init__(self, source, plan, task_ids: np.ndarray,
                  repeats: np.ndarray, segment: int,
-                 *, sharding=None, prefetch: bool = True):
+                 *, sharding=None, prefetch: bool = True,
+                 budget: Optional[FeedBudget] = None):
         self.source = source
         self.plan = plan
         self.segment = int(segment)
@@ -80,6 +134,8 @@ class SegmentFeed:
         self._cursor = 0                               # columns consumed
         self._sharding = sharding
         self._prefetch = prefetch
+        self._budget = budget
+        self._budget_key = None                        # held reservation
         self._gen = 0                                  # seek/replan epoch
         self._pending: Optional[Tuple[int, int, Future]] = None
         self._pool = ThreadPoolExecutor(
@@ -167,8 +223,26 @@ class SegmentFeed:
             self._pending = None
             return
         gen = self._gen
+        if self._budget is not None:
+            # reserve the estimated segment bytes before the background
+            # read; a denial is not an error — next_segment just builds
+            # the segment synchronously when it gets there
+            est = (self._ids.shape[0] * self.segment
+                   * self.plan.task_size * 4)
+            key = (id(self), gen, start)
+            if not self._budget.try_reserve(key, est):
+                with self._stats_lock:
+                    self.stats.budget_denials += 1
+                self._pending = None
+                return
+            self._budget_key = key
         self._pending = (gen, start,
                          self._pool.submit(self._build, start, gen))
+
+    def _drop_budget(self):
+        if self._budget is not None and self._budget_key is not None:
+            self._budget.release(self._budget_key)
+            self._budget_key = None
 
     # -- the streaming contract --------------------------------------------
 
@@ -189,9 +263,33 @@ class SegmentFeed:
                 self.stats.prefetch_misses += 1
             with self._stats_lock:
                 self.stats._release((gen, start))
+            self._drop_budget()
             self._cursor = min(start + self.segment, self.total_columns)
             self._schedule(self._cursor)
             return seg
+
+    def ready(self) -> bool:
+        """True when :meth:`next_segment` would not block on input I/O:
+        the stream is exhausted (returns None immediately), or the
+        background read of the segment at the cursor has completed. A
+        scheduler polls this to time-slice the job whose data is already
+        on its way to the device (``JobHandle.ready``)."""
+        with self._lock:
+            if self.exhausted or self._closed:
+                return True
+            p = self._pending
+            return (p is not None and p[:2] == (self._gen, self._cursor)
+                    and p[2].done())
+
+    def prime(self):
+        """Kick off the background read of the segment at the cursor
+        without consuming anything — so a freshly admitted job's first
+        segment prefetches while *other* jobs run their slices.
+        Idempotent; a no-op when a prefetch is already pending (or the
+        shared budget denies the reservation)."""
+        with self._lock:
+            if self._pending is None:
+                self._schedule(self._cursor)
 
     def seek(self, cursor: int, task_ids=None, repeats=None):
         """Reposition the stream (checkpoint restore): install the saved
@@ -235,6 +333,7 @@ class SegmentFeed:
         if self._pending is not None:
             self._pending[2].cancel()
             self._pending = None
+        self._drop_budget()
         self._schedule(self._cursor)
 
     def close(self):
@@ -244,4 +343,5 @@ class SegmentFeed:
             if not self._closed:
                 self._closed = True
                 self._pending = None
+                self._drop_budget()
                 self._pool.shutdown(wait=False)

@@ -53,6 +53,25 @@ class ThroughputTracker:
         med = np.median(self.rate)
         return self.rate < threshold * med
 
+    def update_work(self, work_per_rank: np.ndarray, seconds: float):
+        """EWMA update from *work executed per rank over one slice* —
+        the observation a scheduler actually has between time slices
+        (``update`` wants per-rank seconds at equal work; a slice gives
+        the transpose: equal wall time, per-rank work).
+
+        A rank that was *assigned* nothing this slice (zero work — e.g.
+        a -1-padded tail of a previous re-plan) carries no throughput
+        signal, so its estimate is left untouched. Folding zeros in
+        would ratchet: rate decays → next re-plan assigns it even less
+        → permanent starvation of a rank that was never actually slow."""
+        work = np.asarray(work_per_rank, np.float64)
+        inst = work / max(float(seconds), 1e-9)
+        observed = work > 0
+        self.rate = np.where(observed,
+                             self.alpha * inst
+                             + (1 - self.alpha) * self.rate,
+                             self.rate)
+
 
 def rebalance_tasks(task_ids: List[int], rate: np.ndarray,
                     tasks_per_segment: int) -> np.ndarray:
@@ -135,3 +154,35 @@ def outer_rebalance(handle, tracker: ThroughputTracker,
     if drift < drift_threshold:
         return None
     return replan_handle(handle, tracker)
+
+
+def rebalance_hook(alpha: float = 0.5, drift_threshold: float = 0.0):
+    """Per-job slice hook for ``repro.core.scheduler.JobScheduler`` —
+    :func:`outer_rebalance` as the between-slices callback the scheduler
+    invokes for the job: ``scheduler.submit(cfg, ds, on_slice=
+    rebalance_hook())``.
+
+    The returned callable has the scheduler's hook signature
+    ``hook(handle, slice_stats)`` (``slice_stats.seconds`` +
+    ``slice_stats.work_per_rank``); it maintains one
+    :class:`ThroughputTracker` per handle, folds each slice's realized
+    per-rank work into it, and re-plans the handle's unread tasks only
+    on persistent drift — exactly the coarse outer loop, now driven by
+    the scheduler instead of a hand-written step loop. One hook instance
+    may be shared across jobs (trackers are per-handle, weakly keyed —
+    a finished handle's tracker is dropped with it, and a recycled
+    object address can never inherit a stale tracker)."""
+    import weakref
+    trackers = weakref.WeakKeyDictionary()
+
+    def hook(handle, slice_stats):
+        tr = trackers.get(handle)
+        if tr is None:
+            trackers[handle] = tr = ThroughputTracker(
+                n_procs=handle.config.n_procs, alpha=alpha)
+        tr.update_work(slice_stats.work_per_rank, slice_stats.seconds)
+        if handle.feed.exhausted:
+            return None             # nothing left to re-route
+        return outer_rebalance(handle, tr, drift_threshold)
+
+    return hook

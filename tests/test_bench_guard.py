@@ -31,6 +31,16 @@ FIG10 = {
                  "win_split_vs_hash_reduce_pct": 70.0,
                  "oracle_exact": True},
 }
+FIG11 = {
+    "per_k": {"16": {"policies": {}}},
+    "criteria": {"max_K": 16,
+                 "fairshare_p95_win_pct": 41.0,
+                 "fair_vs_fifo_makespan_pct": -14.0,
+                 "jain_fair": 0.48,
+                 "fair_jain_beats_fifo": True,
+                 "priority_favors_high": True,
+                 "all_jobs_exact": True},
+}
 
 
 @pytest.fixture()
@@ -40,17 +50,21 @@ def dirs(tmp_path):
     results.mkdir()
     baseline.mkdir()
 
-    def write(fig8=FIG8, fig9=FIG9, fig10=FIG10, fresh_fig8=None,
-              fresh_fig9=None, fresh_fig10=None):
+    def write(fig8=FIG8, fig9=FIG9, fig10=FIG10, fig11=FIG11,
+              fresh_fig8=None, fresh_fig9=None, fresh_fig10=None,
+              fresh_fig11=None):
         (baseline / "BENCH_io_overlap.json").write_text(json.dumps(fig8))
         (baseline / "BENCH_imbalance.json").write_text(json.dumps(fig9))
         (baseline / "BENCH_keyskew.json").write_text(json.dumps(fig10))
+        (baseline / "BENCH_multitenant.json").write_text(json.dumps(fig11))
         (results / "fig8_io_overlap.json").write_text(
             json.dumps(fresh_fig8 if fresh_fig8 is not None else fig8))
         (results / "fig9_imbalance.json").write_text(
             json.dumps(fresh_fig9 if fresh_fig9 is not None else fig9))
         (results / "fig10_keyskew.json").write_text(
             json.dumps(fresh_fig10 if fresh_fig10 is not None else fig10))
+        (results / "fig11_multitenant.json").write_text(
+            json.dumps(fresh_fig11 if fresh_fig11 is not None else fig11))
 
     return str(results), str(baseline), write
 
@@ -61,7 +75,8 @@ def test_clean_artifacts_pass(dirs):
     assert check("fig8", results, baseline) == []
     assert check("fig9", results, baseline) == []
     assert check("fig10", results, baseline) == []
-    assert main(["fig8", "fig9", "fig10", "--results", results,
+    assert check("fig11", results, baseline) == []
+    assert main(["fig8", "fig9", "fig10", "fig11", "--results", results,
                  "--baseline", baseline]) == 0
 
 
@@ -129,3 +144,53 @@ def test_fig10_gates(dirs):
     write(fresh_fig10=inexact)
     assert any("oracle_exact" in e and "expected true" in e
                for e in check("fig10", results, baseline))
+
+
+def test_fig11_gates(dirs):
+    """The multi-tenant guard: fair-share p95 win may shrink at most
+    35pp below baseline (41), fair-fleet makespan may rise at most 25pp
+    above it, per-job exactness + jain ordering are hard-required."""
+    results, baseline, write = dirs
+    ok = copy.deepcopy(FIG11)
+    ok["criteria"]["fairshare_p95_win_pct"] = 10.0     # within 35pp of 41
+    ok["criteria"]["fair_vs_fifo_makespan_pct"] = 5.0  # within 25pp
+    write(fresh_fig11=ok)
+    assert check("fig11", results, baseline) == []
+    # p95 win collapsing to ~FIFO trips the min gate
+    bad = copy.deepcopy(FIG11)
+    bad["criteria"]["fairshare_p95_win_pct"] = 2.0
+    write(fresh_fig11=bad)
+    assert any("fairshare_p95_win_pct" in e
+               for e in check("fig11", results, baseline))
+    # slicing overhead ballooning the makespan trips the max gate
+    slow = copy.deepcopy(FIG11)
+    slow["criteria"]["fair_vs_fifo_makespan_pct"] = 30.0
+    write(fresh_fig11=slow)
+    assert any("fair_vs_fifo_makespan_pct" in e
+               for e in check("fig11", results, baseline))
+    # a diverging job is a hard failure
+    inexact = copy.deepcopy(FIG11)
+    inexact["criteria"]["all_jobs_exact"] = False
+    write(fresh_fig11=inexact)
+    assert any("all_jobs_exact" in e and "expected true" in e
+               for e in check("fig11", results, baseline))
+
+
+def test_fig11_fairness_floor_is_absolute(dirs):
+    """The jain floor is baseline-independent: even a baseline that
+    (hypothetically) recorded terrible fairness cannot excuse a fresh
+    run below 0.30."""
+    results, baseline, write = dirs
+    low_base = copy.deepcopy(FIG11)
+    low_base["criteria"]["jain_fair"] = 0.10
+    unfair = copy.deepcopy(FIG11)
+    unfair["criteria"]["jain_fair"] = 0.15
+    write(fig11=low_base, fresh_fig11=unfair)
+    errs = check("fig11", results, baseline)
+    assert any("jain_fair" in e and "floor" in e for e in errs)
+    # and a missing floor metric is reported, not skipped
+    gone = copy.deepcopy(FIG11)
+    del gone["criteria"]["jain_fair"]
+    write(fresh_fig11=gone)
+    errs = check("fig11", results, baseline)
+    assert any("jain_fair" in e for e in errs)

@@ -1,0 +1,388 @@
+"""Multi-tenant JobScheduler (repro/core/scheduler.py), single device.
+
+Covers the cooperative time-slicing contract (exactness under
+interleaving, policy ordering, per-tenant accounting), the scheduler
+edge cases the issue list calls out — duplicate submits sharing one
+compiled program, restore-after-kill mid-fleet, a raising job's feed
+closing without stalling siblings (the PR-4 leak class) — plus
+admission backpressure and the shared FeedBudget arbiter.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (AdmissionQueueFull, JobConfig, JobScheduler,
+                        available_policies, resolve_policy, submit)
+from repro.core.scheduler import DONE, FAILED
+from repro.core.usecases import (Histogram, WordCount, histogram_oracle,
+                                 wordcount_oracle)
+from repro.data.feed import FeedBudget
+
+VOCAB, N, TASK = 200, 8192, 512
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    rng = np.random.default_rng(0)
+    return rng.integers(0, VOCAB, size=N).astype(np.int32)
+
+
+def wc_cfg(**kw):
+    base = dict(usecase=WordCount(vocab=VOCAB), backend="1s",
+                task_size=TASK, push_cap=256, n_procs=1, segment=2)
+    base.update(kw)
+    return JobConfig(**base)
+
+
+@dataclasses.dataclass(frozen=True)
+class Boom:
+    """Raises at trace time — the poisoned tenant."""
+    vocab: int
+
+    @property
+    def window(self):
+        return self.vocab
+
+    def map_emit(self, toks, task_id):
+        raise ValueError("boom at trace time")
+
+
+# ---------------------------------------------------------------------------
+# policies / admission
+# ---------------------------------------------------------------------------
+
+def test_policy_registry():
+    assert available_policies() == ["fair", "fifo", "priority"]
+    assert resolve_policy("fifo").name == "fifo"
+    with pytest.raises(ValueError, match="nope.*fair"):
+        resolve_policy("nope")
+    with pytest.raises(TypeError):
+        resolve_policy(42)
+
+
+def test_submit_requires_segmented(tokens):
+    sched = JobScheduler()
+    with pytest.raises(ValueError, match="segment"):
+        sched.submit(wc_cfg(segment=0), tokens)
+
+
+def test_one_mesh_many_tenants(tokens):
+    sched = JobScheduler()
+    sched.submit(wc_cfg(), tokens)
+    with pytest.raises(ValueError, match="ONE mesh"):
+        sched.submit(wc_cfg(n_procs=2), tokens)
+
+
+def test_duplicate_name_rejected(tokens):
+    sched = JobScheduler()
+    sched.submit(wc_cfg(), tokens, name="a")
+    with pytest.raises(ValueError, match="duplicate"):
+        sched.submit(wc_cfg(), tokens, name="a")
+
+
+def test_admission_backpressure(tokens):
+    """The bounded admission queue pushes back on submit; draining the
+    fleet reopens it."""
+    sched = JobScheduler(max_pending=2)
+    sched.submit(wc_cfg(), tokens)
+    sched.submit(wc_cfg(), tokens)
+    with pytest.raises(AdmissionQueueFull, match="max_pending=2"):
+        sched.submit(wc_cfg(), tokens)
+    sched.run_until_complete()
+    sched.submit(wc_cfg(), tokens)          # open slots again
+    res = sched.run_until_complete()
+    assert len(res) == 3
+
+
+# ---------------------------------------------------------------------------
+# exactness + accounting under interleaving
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ["fifo", "fair", "priority"])
+def test_interleaved_results_equal_solo(tokens, policy):
+    """Time slicing must be invisible in every job's output, for every
+    policy — the multi-tenant analogue of streamed == resident."""
+    half = tokens[: N // 2]
+    oracle_wc = wordcount_oracle(tokens, VOCAB)
+    oracle_hist = histogram_oracle(half, VOCAB, 16)
+    hist_cfg = JobConfig(usecase=Histogram(vocab=VOCAB, n_bins=16),
+                         backend="1s", task_size=TASK, push_cap=256,
+                         n_procs=1, segment=2)
+    sched = JobScheduler(policy=policy)
+    sched.submit(wc_cfg(), tokens, name="wc", tenant="a")
+    sched.submit(hist_cfg, half, name="hist", tenant="b", priority=1)
+    res = sched.run_until_complete()
+    assert res["wc"].records == oracle_wc
+    np.testing.assert_array_equal(res["hist"].output, oracle_hist)
+    # handles cache their results — a second call is free and identical
+    assert sched["wc"].handle.result() is res["wc"]
+
+
+def test_tenant_accounting(tokens):
+    sched = JobScheduler(policy="fair")
+    sched.submit(wc_cfg(), tokens, name="a1", tenant="a")
+    sched.submit(wc_cfg(), tokens, name="a2", tenant="a")
+    sched.submit(wc_cfg(), tokens[: N // 2], name="b", tenant="b")
+    sched.run_until_complete()
+    n_tasks, half_tasks = N // TASK, N // 2 // TASK
+    assert sched.tenants["a"].work == 2 * n_tasks      # repeats all 1
+    assert sched.tenants["b"].work == half_tasks
+    assert sched.tenants["a"].segments == 2 * ((n_tasks + 1) // 2)
+    assert sched.tenants["a"].jobs_done == 2
+    assert sched.tenants["b"].jobs_done == 1
+    assert sched.tenants["a"].wall > 0
+    st = sched.stats()
+    assert {j["name"] for j in st["jobs"]} == {"a1", "a2", "b"}
+    assert all(j["state"] == DONE for j in st["jobs"])
+    for name in ("a1", "a2", "b"):
+        assert sched.latency(name) > 0
+
+
+def test_fair_share_finishes_small_tenant_first(tokens):
+    """The headline behavior: under FIFO a small tenant queues behind
+    the straggler; under fair share it finishes long before."""
+    big, small = tokens, tokens[: 2 * TASK]
+
+    def run(policy):
+        sched = JobScheduler(policy=policy, slice_segments=1)
+        sched.submit(wc_cfg(segment=1), big, name="big", tenant="batch")
+        sched.submit(wc_cfg(segment=1), small, name="small",
+                     tenant="interactive")
+        sched.run_until_complete()
+        return sched.latency("small"), sched.latency("big")
+
+    fifo_small, fifo_big = run("fifo")
+    fair_small, fair_big = run("fair")
+    assert fifo_small > fifo_big        # FIFO: small waits out the giant
+    assert fair_small < fair_big        # fair: small slips through
+    assert fair_small < fifo_small
+
+
+def test_priority_policy_orders_classes(tokens):
+    sched = JobScheduler(policy="priority", slice_segments=1)
+    sched.submit(wc_cfg(segment=1), tokens, name="low", priority=0)
+    sched.submit(wc_cfg(segment=1), tokens, name="high", priority=5)
+    sched.run_until_complete()
+    assert sched.latency("high") < sched.latency("low")
+
+
+def test_run_until_complete_is_resumable(tokens):
+    sched = JobScheduler(policy="fifo")
+    sched.submit(wc_cfg(), tokens, name="a")
+    partial = sched.run_until_complete(max_slices=2)
+    assert partial == {} and sched["a"].state == "live"
+    res = sched.run_until_complete()
+    assert res["a"].records == wordcount_oracle(tokens, VOCAB)
+
+
+# ---------------------------------------------------------------------------
+# duplicate submits share ONE compiled program
+# ---------------------------------------------------------------------------
+
+def test_duplicate_submit_shares_compiled_program(tokens):
+    """K submits of the same JobConfig must share one jitted engine —
+    asserted inside the scheduler at admission, observable both through
+    n_unique_programs and the handles' segment-fn identity."""
+    sched = JobScheduler(policy="fair")
+    handles = [sched.submit(wc_cfg(), tokens, name=f"j{i}",
+                            tenant=f"t{i}") for i in range(4)]
+    res = sched.run_until_complete()
+    assert sched.n_unique_programs == 1
+    assert len({id(h._seg_fns) for h in handles}) == 1
+    oracle = wordcount_oracle(tokens, VOCAB)
+    for i in range(4):
+        assert res[f"j{i}"].records == oracle
+    # a different use-case window really is a second program
+    hist_cfg = JobConfig(usecase=Histogram(vocab=VOCAB, n_bins=16),
+                         backend="1s", task_size=TASK, push_cap=256,
+                         n_procs=1, segment=2)
+    sched.submit(hist_cfg, tokens, name="hist")
+    sched.run_until_complete()
+    assert sched.n_unique_programs == 2
+
+
+# ---------------------------------------------------------------------------
+# failure isolation (the PR-4 leak class, fleet edition)
+# ---------------------------------------------------------------------------
+
+def test_raising_job_closes_feed_without_stalling_siblings(tokens):
+    """A tenant whose map_emit raises must fail alone: its prefetch
+    thread is closed (no leak), its error is kept, and every sibling
+    still completes exactly."""
+    sched = JobScheduler(policy="fair")
+    bad_cfg = JobConfig(usecase=Boom(vocab=VOCAB), backend="1s",
+                        task_size=TASK, push_cap=256, n_procs=1,
+                        segment=2)
+    hb = sched.submit(bad_cfg, tokens, name="bad", tenant="evil")
+    hg1 = sched.submit(wc_cfg(), tokens, name="good1")
+    hg2 = sched.submit(wc_cfg(), tokens[: N // 2], name="good2")
+    res = sched.run_until_complete()
+    assert sched["bad"].state == FAILED
+    assert isinstance(sched["bad"].error, ValueError)
+    assert hb.feed._closed                      # no leaked prefetch thread
+    assert sched.tenants["evil"].jobs_failed == 1
+    assert set(res) == {"good1", "good2"}
+    assert res["good1"].records == wordcount_oracle(tokens, VOCAB)
+    assert res["good2"].records == wordcount_oracle(tokens[: N // 2],
+                                                    VOCAB)
+    assert hg1.feed._closed and hg2.feed._closed    # finished = closed
+
+
+def test_raise_on_error_fails_fast(tokens):
+    sched = JobScheduler(policy="fifo")
+    bad_cfg = JobConfig(usecase=Boom(vocab=VOCAB), backend="1s",
+                        task_size=TASK, push_cap=256, n_procs=1,
+                        segment=2)
+    hb = sched.submit(bad_cfg, tokens, name="bad")
+    with pytest.raises(ValueError, match="boom"):
+        sched.run_until_complete(raise_on_error=True)
+    assert hb.feed._closed
+
+
+# ---------------------------------------------------------------------------
+# shared FeedBudget
+# ---------------------------------------------------------------------------
+
+def test_feed_budget_arbitrates_prefetch(tokens):
+    """A budget smaller than the fleet's combined prefetch appetite must
+    deny background reads (counted) without changing any result, and
+    every reservation must be returned by the end."""
+    budget_bytes = TASK * 4 * 2          # room for ~one 2-task segment
+    sched = JobScheduler(policy="fair", max_live_bytes=budget_bytes)
+    for i in range(4):
+        sched.submit(wc_cfg(segment=1), tokens, name=f"j{i}",
+                     tenant=f"t{i}")
+    res = sched.run_until_complete()
+    oracle = wordcount_oracle(tokens, VOCAB)
+    for i in range(4):
+        assert res[f"j{i}"].records == oracle
+    denials = sum(j.handle.feed.stats.budget_denials for j in sched.jobs)
+    assert denials > 0                   # the arbiter actually pushed back
+    assert sched.budget.live_bytes == 0  # everything released
+    assert sched.budget.denials == denials
+
+
+def test_feed_budget_always_grants_when_idle():
+    """One oversized reservation is granted when nothing is held —
+    prefetch degrades to serialized, never to globally disabled."""
+    b = FeedBudget(10)
+    assert b.try_reserve("a", 100)       # over budget but nothing held
+    assert not b.try_reserve("b", 1)     # now it is full
+    b.release("a")
+    assert b.try_reserve("b", 1)
+    b.release("b")
+    assert b.live_bytes == 0
+
+
+def test_ready_and_prime(tokens):
+    """ready() reports a landed prefetch without consuming anything;
+    prime() starts one for a never-stepped job."""
+    h = submit(wc_cfg(segment=1), tokens)
+    assert not h.ready()                 # nothing scheduled yet
+    h.feed.prime()
+    h.feed._pending[2].result()          # wait for the background read
+    assert h.ready()
+    cursor_before = h.cursor
+    assert h.cursor == cursor_before     # ready()/prime() consumed nothing
+    assert h.result().records == wordcount_oracle(tokens, VOCAB)
+    assert h.ready()                     # done handles are always ready
+
+
+def test_rebalance_hook_between_slices(tokens):
+    """`repro.ft.straggler.rebalance_hook` plugs outer_rebalance in as a
+    per-job on_slice hook: it runs between slices (never after the
+    final one), re-plans through the job's own feed, and exactness is
+    untouched."""
+    from repro.ft.straggler import rebalance_hook
+    calls = []
+    inner = rebalance_hook(drift_threshold=1.0)   # always past threshold
+
+    def hook(handle, slice_stats):
+        calls.append(slice_stats.segments)
+        return inner(handle, slice_stats)
+
+    sched = JobScheduler(policy="fifo")
+    sched.submit(wc_cfg(), tokens, name="a", on_slice=hook)
+    res = sched.run_until_complete()
+    assert res["a"].records == wordcount_oracle(tokens, VOCAB)
+    assert len(calls) >= 2 and all(c == 1 for c in calls)
+
+
+# ---------------------------------------------------------------------------
+# fleet checkpoint / restore (restore-after-kill mid-fleet)
+# ---------------------------------------------------------------------------
+
+def _fleet(tmp_path, tokens):
+    sched = JobScheduler(policy="fair")
+    sched.submit(wc_cfg(), tokens, name="a", tenant="ta")
+    sched.submit(wc_cfg(), tokens[: N // 2], name="b", tenant="tb")
+    return sched
+
+
+def test_restore_after_kill_mid_fleet(tmp_path, tokens):
+    oracle_a = wordcount_oracle(tokens, VOCAB)
+    oracle_b = wordcount_oracle(tokens[: N // 2], VOCAB)
+    s1 = _fleet(tmp_path, tokens)
+    s1.run_until_complete(max_slices=5)          # mid-fleet, both live
+    assert all(j.state == "live" for j in s1.jobs)
+    work_at_ckpt = {t: s.work for t, s in s1.tenants.items()}
+    s1.checkpoint(str(tmp_path / "fleet"))
+    for j in s1.jobs:                            # "kill" the process
+        j.handle.close()
+
+    s2 = _fleet(tmp_path, tokens)
+    s2.restore(str(tmp_path / "fleet"))
+    # accounting resumed, so fair share stays fair across the restart
+    assert {t: s.work for t, s in s2.tenants.items()} == work_at_ckpt
+    # restore seeks — the resumed feeds never re-read the consumed prefix
+    res = s2.run_until_complete()
+    assert res["a"].records == oracle_a
+    assert res["b"].records == oracle_b
+    for j in s2.jobs:
+        full = j.handle.plan.n_tasks * TASK * 4
+        assert j.handle.feed.stats.bytes_read < full
+
+
+def test_fleet_checkpoint_names_never_collide(tmp_path):
+    """Sanitizing job names for the filesystem must stay injective —
+    'job/1' and 'job_1' may not share a snapshot directory (one job
+    would silently restore the other's carry)."""
+    from repro.ckpt import FleetCheckpoint
+    f = FleetCheckpoint(str(tmp_path / "fleet"))
+    assert f.manager("job/1").dir != f.manager("job_1").dir
+    assert f.manager("job/1").dir == f.manager("job/1").dir  # stable
+
+
+def test_update_work_ignores_unobserved_ranks():
+    """A rank assigned zero work in a slice carries no throughput
+    signal; folding it in as ~zero would ratchet it into permanent
+    starvation at the next re-plan."""
+    from repro.ft.straggler import ThroughputTracker
+    tr = ThroughputTracker(n_procs=3)
+    tr.update_work([4, 4, 0], 1.0)
+    assert tr.rate[2] == 1.0            # prior kept
+    assert tr.rate[0] > 1.0             # observed ranks move
+
+
+def test_restore_rejects_missing_resubmission(tmp_path, tokens):
+    s1 = _fleet(tmp_path, tokens)
+    s1.run_until_complete(max_slices=3)
+    s1.checkpoint(str(tmp_path / "fleet"))
+    s2 = JobScheduler(policy="fair")
+    s2.submit(wc_cfg(), tokens, name="a", tenant="ta")   # "b" forgotten
+    with pytest.raises(ValueError, match="'b'.*not resubmitted"):
+        s2.restore(str(tmp_path / "fleet"))
+
+
+def test_restore_respects_backend_guard(tmp_path, tokens):
+    """The per-job snapshot guards still hold through the fleet path: a
+    job resubmitted with a different backend is rejected, not corrupted."""
+    s1 = _fleet(tmp_path, tokens)
+    s1.run_until_complete(max_slices=5)
+    s1.checkpoint(str(tmp_path / "fleet"))
+    s2 = JobScheduler(policy="fair")
+    s2.submit(wc_cfg(backend="2s"), tokens, name="a", tenant="ta")
+    s2.submit(wc_cfg(), tokens[: N // 2], name="b", tenant="tb")
+    with pytest.raises(ValueError, match="backend"):
+        s2.restore(str(tmp_path / "fleet"))
