@@ -21,7 +21,6 @@ import argparse
 import json
 import os
 import sys
-from typing import Dict, List
 
 try:
     from benchmarks.common import REPO
@@ -36,7 +35,7 @@ except ImportError:                      # invoked as a script from benchmarks/
 # baseline-independent: the fresh value must be >= the stated minimum
 # (for scale-free metrics like a fairness index, where "worse than the
 # baseline by N" is the wrong question).
-CHECKS: Dict[str, Dict] = {
+CHECKS: dict[str, dict] = {
     "fig8": {
         "fresh": "fig8_io_overlap.json",
         "baseline": "BENCH_io_overlap.json",
@@ -129,9 +128,9 @@ def dig(obj, path: str):
     return obj
 
 
-def check(name: str, results_dir: str, baseline_dir: str) -> List[str]:
+def check(name: str, results_dir: str, baseline_dir: str) -> list[str]:
     spec = CHECKS[name]
-    errors: List[str] = []
+    errors: list[str] = []
     fresh_path = os.path.join(results_dir, spec["fresh"])
     base_path = os.path.join(baseline_dir, spec["baseline"])
     if not os.path.isfile(fresh_path):
@@ -185,7 +184,7 @@ def main(argv=None) -> int:
                          "baselines (default: the repo root — smoke runs "
                          "never overwrite those)")
     args = ap.parse_args(argv)
-    failures: List[str] = []
+    failures: list[str] = []
     for name in args.benchmarks:
         errs = check(name, args.results, args.baseline)
         for e in errs:

@@ -30,7 +30,6 @@ import subprocess
 import sys
 import textwrap
 import time
-from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -169,7 +168,7 @@ print(json.dumps(dict(t_a2a=t1, t_a2a_lat=alpha, t_a2a_byte=beta,
 """
 
 
-def calibrate(task_size=4096, n_procs=8, push_cap=1024, vocab=65536) -> Dict:
+def calibrate(task_size=4096, n_procs=8, push_cap=1024, vocab=65536) -> dict:
     out = run_py(CALIB_CODE.format(task_size=task_size, n_procs=n_procs,
                                    push_cap=push_cap, vocab=vocab),
                  n_devices=1)
@@ -218,14 +217,14 @@ class Costs:
         return self.t_a2a_lat + self.t_a2a_byte * T
 
     @staticmethod
-    def from_calibration(c: Dict, comm_overlap=True, t_io=0.0) -> "Costs":
+    def from_calibration(c: dict, comm_overlap=True, t_io=0.0) -> Costs:
         return Costs(c["t_task1"], c["t_task_per_rep"], c["t_fold"],
                      c["t_merge"], c["t_a2a_lat"], c["t_a2a_byte"],
                      comm_overlap=comm_overlap, t_io=t_io)
 
     @staticmethod
     def tpu_like(task_mb=64.0, push_cap=1024, n_procs=256,
-                 comm_overlap=True, storage_gbps=2.0) -> "Costs":
+                 comm_overlap=True, storage_gbps=2.0) -> Costs:
         """First-principles v5e-flavoured constants (DESIGN.md §9): task
         compute is memory-bound over the task bytes; input retrieval from
         parallel storage at ``storage_gbps``/rank dominates (the paper's
@@ -256,7 +255,7 @@ def simulate(costs: Costs, repeats: np.ndarray, backend: str,
     P, T = repeats.shape
     mt = costs.task_time(repeats)                 # (P, T)
     n_levels = int(np.ceil(np.log2(max(P, 2))))
-    timeline: List = []
+    timeline: list = []
     t = 0.0
 
     def round_(dur: float, phase: str, busy):
@@ -308,7 +307,7 @@ def simulate(costs: Costs, repeats: np.ndarray, backend: str,
     return (t, timeline) if want_timeline else t
 
 
-def speedup(costs: Costs, repeats: np.ndarray) -> Dict[str, float]:
+def speedup(costs: Costs, repeats: np.ndarray) -> dict[str, float]:
     t2 = simulate(costs, repeats, "2s")
     t1 = simulate(costs, repeats, "1s")
     return {"t_2s": t2, "t_1s": t1, "improvement_pct": 100 * (1 - t1 / t2)}

@@ -36,7 +36,6 @@ from __future__ import annotations
 import argparse
 import json
 import os
-from typing import Dict, List
 
 import numpy as np
 
@@ -113,7 +112,7 @@ def _check_mix():
     assert (ref == got).all(), "host mix32 diverged from kv.mix32"
 
 
-def _task_uniques(source, n_tasks: int, task_size: int) -> List[np.ndarray]:
+def _task_uniques(source, n_tasks: int, task_size: int) -> list[np.ndarray]:
     out = []
     for t in range(n_tasks):
         chunk = source.read(t * task_size, task_size)
@@ -121,9 +120,9 @@ def _task_uniques(source, n_tasks: int, task_size: int) -> List[np.ndarray]:
     return out
 
 
-def placement_stats(uniques: List[np.ndarray], omap: np.ndarray,
+def placement_stats(uniques: list[np.ndarray], omap: np.ndarray,
                     osplit: np.ndarray, n_procs: int,
-                    push_cap: int) -> Dict:
+                    push_cap: int) -> dict:
     """Replay the engines' routing rule (bucketize + lookup_owner) over
     one corpus: per-owner received records and per-(task, owner) counts
     past ``push_cap`` (= ownership transfers kept local)."""
@@ -145,8 +144,8 @@ def placement_stats(uniques: List[np.ndarray], omap: np.ndarray,
                 transfers=transfers)
 
 
-def model_rows(calib: Dict, P: int, tasks_per_rank: int, task_size: int,
-               model_push_cap: int, sample_tasks: int, skews) -> List[Dict]:
+def model_rows(calib: dict, P: int, tasks_per_rank: int, task_size: int,
+               model_push_cap: int, sample_tasks: int, skews) -> list[dict]:
     from repro.core.partition import (HashPartitioner, SampledPartitioner,
                                       sample_key_histogram)
     from repro.core.planner import plan_input, read_tasks
@@ -170,7 +169,7 @@ def model_rows(calib: Dict, P: int, tasks_per_rank: int, task_size: int,
         plan = plan_input(n_tasks * task_size, task_size, P)
         hist = sample_key_histogram(
             lambda ids: read_tasks(src, plan, ids), plan, uc, sample_tasks)
-        row: Dict = {"a": a, "P": P, "n_tasks": n_tasks, "per_part": {}}
+        row: dict = {"a": a, "P": P, "n_tasks": n_tasks, "per_part": {}}
         for name, part in parts.items():
             omap, osplit = part.build(hist, P)
             st = placement_stats(uniques, omap, osplit, P, model_push_cap)
@@ -193,7 +192,7 @@ def model_rows(calib: Dict, P: int, tasks_per_rank: int, task_size: int,
     return rows
 
 
-def measure_real(skews, n_procs: int, n_tokens: int, reps_n: int) -> Dict:
+def measure_real(skews, n_procs: int, n_tokens: int, reps_n: int) -> dict:
     out = run_py(REAL_CODE.format(n_procs=n_procs, n_tokens=n_tokens,
                                   vocab=VOCAB, task_size=TASK_SIZE,
                                   push_cap=PUSH_CAP, skews=list(skews),
@@ -202,7 +201,7 @@ def measure_real(skews, n_procs: int, n_tokens: int, reps_n: int) -> Dict:
     return json.loads(out.strip().splitlines()[-1])
 
 
-def run(quick: bool = False, smoke: bool = False) -> Dict:
+def run(quick: bool = False, smoke: bool = False) -> dict:
     _check_mix()
     if smoke:
         # the model pass is host numpy (cheap) — smoke keeps the quick

@@ -31,7 +31,6 @@ from __future__ import annotations
 import argparse
 import json
 import os
-from typing import Dict
 
 try:
     from benchmarks.common import REPO, run_py, save_json
@@ -125,7 +124,7 @@ print(json.dumps(out))
 
 
 def measure_real(ks, n_procs: int, total: int, task: int, cap: int,
-                 budget_segs: int) -> Dict:
+                 budget_segs: int) -> dict:
     params = (f"P={n_procs}\nTASK={task}\nCAP={cap}\nKS={list(ks)}\n"
               f"TOTAL={total}\nSIZE_ZIPF={SIZE_ZIPF}\n"
               f"BUDGET_SEGS={budget_segs}\n")
@@ -133,7 +132,7 @@ def measure_real(ks, n_procs: int, total: int, task: int, cap: int,
     return json.loads(out.strip().splitlines()[-1])
 
 
-def run(quick: bool = False, smoke: bool = False) -> Dict:
+def run(quick: bool = False, smoke: bool = False) -> dict:
     if smoke:
         ks, n_procs, total, task, cap = (1, 8), 2, 196_608, 512, 256
     elif quick:

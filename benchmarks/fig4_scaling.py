@@ -11,7 +11,6 @@ real wall-times at P=2..8 (single-core caveat in common.py).
 """
 from __future__ import annotations
 
-from typing import Dict, List
 
 import numpy as np
 
@@ -49,14 +48,14 @@ print(json.dumps(out))
 """
 
 
-def real_times(n_procs: int, n_tokens: int, mode: str) -> Dict[str, float]:
+def real_times(n_procs: int, n_tokens: int, mode: str) -> dict[str, float]:
     import json
     out = run_py(REAL_CODE.format(n_procs=n_procs, n_tokens=n_tokens,
                                   mode=mode), n_devices=n_procs)
     return json.loads(out.strip().splitlines()[-1])
 
 
-def model_row(costs: Costs, P: int, T: int, mode: str) -> Dict:
+def model_row(costs: Costs, P: int, T: int, mode: str) -> dict:
     reps = imbalance_repeats(P, T, mode=mode, hot_factor=HOT_FACTOR,
                              hot_fraction=HOT_FRACTION)
     t2 = simulate(costs, reps, "2s")
@@ -65,11 +64,11 @@ def model_row(costs: Costs, P: int, T: int, mode: str) -> Dict:
             "improvement_pct": 100 * (1 - t1 / t2)}
 
 
-def run(quick: bool = False) -> Dict:
+def run(quick: bool = False) -> dict:
     print("[fig4] calibrating per-op costs...")
     calib = calibrate()
     costs_cpu = Costs.from_calibration(calib)
-    rec: Dict = {"calibration": calib, "model": {}, "real": {},
+    rec: dict = {"calibration": calib, "model": {}, "real": {},
                  "tpu_projection": {}}
 
     # --- calibrated model at the paper's scales -------------------------
@@ -78,7 +77,7 @@ def run(quick: bool = False) -> Dict:
                             ("4b", "balanced", True),
                             ("4c", "unbalanced", False),
                             ("4d", "unbalanced", True)):
-        rows: List[Dict] = []
+        rows: list[dict] = []
         for P in PAPER_PROCS:
             T = 32 if weak else max(2, T_STRONG // P)
             rows.append(model_row(costs_cpu, P, T, mode))
@@ -90,8 +89,8 @@ def run(quick: bool = False) -> Dict:
               f"model avg {avg:+.1f}% peak {peak:+.1f}%")
 
     # --- TPU-parameterized projection (v5e constants) --------------------
-    for fig, mode, weak in (("4b", "balanced", True),
-                            ("4d", "unbalanced", True)):
+    for fig, mode, _weak in (("4b", "balanced", True),
+                             ("4d", "unbalanced", True)):
         rows = []
         for P in PAPER_PROCS:
             c = Costs.tpu_like(n_procs=P)

@@ -12,7 +12,6 @@ sync(blocking).
 from __future__ import annotations
 
 import json
-from typing import Dict
 
 from benchmarks.common import run_py, save_json
 
@@ -60,7 +59,7 @@ print(json.dumps(out))
 """
 
 
-def run(quick: bool = False) -> Dict:
+def run(quick: bool = False) -> dict:
     n = 500_000 if quick else 2_000_000
     out = run_py(CODE.format(n_tokens=n), n_devices=8)
     t = json.loads(out.strip().splitlines()[-1])

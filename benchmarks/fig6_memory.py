@@ -13,13 +13,12 @@ Here both axes are measured exactly from the engines' device allocations:
 from __future__ import annotations
 
 import json
-from typing import Dict
 
 from benchmarks.common import run_py, save_json
 
 
 def analytic_bytes(n_tokens_per_proc: int, vocab: int, task: int,
-                   push_cap: int, n_procs: int) -> Dict[str, float]:
+                   push_cap: int, n_procs: int) -> dict[str, float]:
     """Per-process persistent device bytes, from the engine definitions."""
     T = max(1, n_tokens_per_proc // task)
     rec4 = 4                                   # int32
@@ -77,8 +76,8 @@ print(json.dumps(out))
 """
 
 
-def run(quick: bool = False) -> Dict:
-    rec: Dict = {"analytic": {}, "paper": "similar 10.4-13.7GB/node, "
+def run(quick: bool = False) -> dict:
+    rec: dict = {"analytic": {}, "paper": "similar 10.4-13.7GB/node, "
                  "peak during Combine; 2S adds full map-output buffering"}
     # paper scale: 1 GB/proc (64 MB tasks), and this container's scale
     for label, toks_pp, vocab, task, cap, P in (

@@ -14,7 +14,6 @@ delta (real), recording the adaptation finding.
 from __future__ import annotations
 
 import json
-from typing import Dict, List
 
 import numpy as np
 
@@ -23,7 +22,7 @@ from benchmarks.common import (Costs, calibrate, run_py, save_json,
 from repro.data.corpus import imbalance_repeats
 
 
-def ascii_timeline(timeline: List, P: int, width: int = 72) -> str:
+def ascii_timeline(timeline: list, P: int, width: int = 72) -> str:
     total = timeline[-1][1]
     rows = []
     for p in range(min(P, 8)):
@@ -80,13 +79,13 @@ print(json.dumps(dict(t_eager=t_eager, t_forced=t_forced,
 """
 
 
-def run(quick: bool = False) -> Dict:
+def run(quick: bool = False) -> dict:
     calib = calibrate()
     costs = Costs.from_calibration(calib)
     P, T = 8, 16
     reps = imbalance_repeats(P, T, mode="unbalanced", hot_factor=8,
                              hot_fraction=0.125)
-    rec: Dict = {}
+    rec: dict = {}
     for backend in ("2s", "1s"):
         total, tl = simulate(costs, reps, backend, want_timeline=True)
         art = ascii_timeline(tl, P)

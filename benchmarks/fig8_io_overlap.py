@@ -27,7 +27,6 @@ from __future__ import annotations
 import argparse
 import json
 import os
-from typing import Dict
 
 try:
     from benchmarks.common import REPO, run_py, save_json
@@ -83,7 +82,7 @@ print(json.dumps(out))
 
 
 def measure(task_sizes, n_tokens: int, segment: int, n_procs: int = 8,
-            reps: int = 3) -> Dict:
+            reps: int = 3) -> dict:
     out = run_py(CODE.format(n_procs=n_procs, n_tokens=n_tokens,
                              segment=segment, task_sizes=list(task_sizes),
                              reps=reps),
@@ -98,7 +97,7 @@ def measure(task_sizes, n_tokens: int, segment: int, n_procs: int = 8,
     }
 
 
-def run(quick: bool = False, smoke: bool = False) -> Dict:
+def run(quick: bool = False, smoke: bool = False) -> dict:
     if smoke:
         rec = measure(task_sizes=[1024], n_tokens=131_072, segment=2,
                       n_procs=2, reps=1)

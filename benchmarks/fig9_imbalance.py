@@ -36,7 +36,6 @@ import argparse
 import dataclasses
 import json
 import os
-from typing import Dict, List
 
 try:
     from benchmarks.common import (REPO, Costs, calibrate, run_py,
@@ -89,7 +88,7 @@ print(json.dumps(out))
 """
 
 
-def model_rows(costs: Costs, P: int, T: int, skews) -> List[Dict]:
+def model_rows(costs: Costs, P: int, T: int, skews) -> list[dict]:
     from repro.data.corpus import zipf_skew_repeats
     rows = []
     for s in skews:
@@ -107,7 +106,7 @@ def model_rows(costs: Costs, P: int, T: int, skews) -> List[Dict]:
     return rows
 
 
-def measure_real(skews, n_procs: int, n_tokens: int, reps_n: int) -> Dict:
+def measure_real(skews, n_procs: int, n_tokens: int, reps_n: int) -> dict:
     out = run_py(REAL_CODE.format(n_procs=n_procs, n_tokens=n_tokens,
                                   skews=list(skews), mean_rep=MEAN_REP,
                                   reps_n=reps_n, task_size=TASK_SIZE,
@@ -116,7 +115,7 @@ def measure_real(skews, n_procs: int, n_tokens: int, reps_n: int) -> Dict:
     return json.loads(out.strip().splitlines()[-1])
 
 
-def run(quick: bool = False, smoke: bool = False) -> Dict:
+def run(quick: bool = False, smoke: bool = False) -> dict:
     if smoke:
         skews = [SKEWS[0], SKEWS[-1]]
         model_p, model_t = 8, 8

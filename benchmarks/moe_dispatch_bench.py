@@ -9,7 +9,6 @@ per-op collective schedule (chunked vs bulk) for the record.
 from __future__ import annotations
 
 import json
-from typing import Dict
 
 from benchmarks.common import run_py, save_json
 
@@ -55,7 +54,7 @@ print(json.dumps(out))
 """
 
 
-def run(quick: bool = False) -> Dict:
+def run(quick: bool = False) -> dict:
     out = run_py(CODE, n_devices=8)
     rec = json.loads(out.strip().splitlines()[-1])
     for k, v in rec.items():

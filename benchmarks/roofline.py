@@ -14,7 +14,6 @@ from __future__ import annotations
 import glob
 import json
 import os
-from typing import Dict, List, Optional
 
 from benchmarks.common import RESULTS, save_json
 
@@ -64,7 +63,7 @@ def model_flops_per_device(arch: str, shape_name: str) -> float:
     return flops / CHIPS
 
 
-def load_cells(dryrun_dir: str, mesh: str = "singlepod") -> List[Dict]:
+def load_cells(dryrun_dir: str, mesh: str = "singlepod") -> list[dict]:
     cells = []
     for path in sorted(glob.glob(os.path.join(dryrun_dir,
                                               f"*__{mesh}.json"))):
@@ -73,7 +72,7 @@ def load_cells(dryrun_dir: str, mesh: str = "singlepod") -> List[Dict]:
     return cells
 
 
-def roofline_row(rec: Dict) -> Optional[Dict]:
+def roofline_row(rec: dict) -> dict | None:
     if rec.get("status") != "ok":
         return {"arch": rec["arch"], "shape": rec["shape"],
                 "status": rec.get("status"),
@@ -121,7 +120,7 @@ def fmt_s(x: float) -> str:
     return f"{x*1e3:8.2f}ms" if x < 10 else f"{x:8.2f}s "
 
 
-def run(dryrun_dir: str = None, quick: bool = False) -> Dict:
+def run(dryrun_dir: str = None, quick: bool = False) -> dict:
     dryrun_dir = dryrun_dir or os.path.join(RESULTS, "dryrun")
     rows = [roofline_row(c) for c in load_cells(dryrun_dir)]
     rows = [r for r in rows if r]

@@ -1,0 +1,18 @@
+"""fleetlint — jaxpr-level static analysis for the SPMD fleet.
+
+Traces every registered backend x use-case program (and every pallas
+kernel) to jaxprs and proves, without executing anything:
+
+  * SPMD001/SPMD002 — collective uniformity: collectives name allowed
+    mesh axes and are never reachable under rank-divergent control flow;
+  * REP001          — replication invariants: values the engines assert
+    replicated really are products of replicated inputs + collectives;
+  * PAL001..PAL003  — pallas static checks: BlockSpec index maps in
+    bounds, integer accumulators wide enough, one interpret-mode policy.
+
+Entry points: ``python -m repro.analysis.lint`` (CLI),
+``repro.analysis.rules.check_program`` / ``check_kernel`` (library),
+``tests/test_analysis.py`` (pytest gate over the shipping matrix plus a
+known-bad mutant corpus).
+"""
+from repro.analysis.taint import Finding  # noqa: F401

@@ -1,0 +1,150 @@
+"""fleetlint CLI — ``python -m repro.analysis.lint``.
+
+Modes:
+
+  --all        check the shipping programs AND kernels (the default)
+  --programs   only the backend x use-case matrix
+  --kernels    only the pallas kernels
+  --selftest   run the seeded mutant corpus instead: every rule must
+               fire on its known-bad seed and stay quiet on the
+               near-miss (exit 1 otherwise)
+
+Output options: ``--json`` (machine-readable findings), ``--verbose``
+(per-program progress), ``--waive RULE:SUBSTR`` (repeatable — silence a
+finding by rule id + a substring of its provenance, e.g.
+``--waive PAL002:moe_dispatch``; waived findings are still reported,
+they just do not fail the run).
+
+Exit status: 0 clean, 1 findings (or selftest failure).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _parse_waivers(raw: list[str]) -> list[tuple[str, str]]:
+    waivers = []
+    for w in raw:
+        rule, _, substr = w.partition(":")
+        if not rule or not substr:
+            raise SystemExit(f"--waive needs RULE:SUBSTR, got {w!r}")
+        waivers.append((rule, substr))
+    return waivers
+
+
+def _is_waived(finding, waivers) -> bool:
+    return any(finding.rule == rule
+               and (substr in finding.program or substr in finding.where)
+               for rule, substr in waivers)
+
+
+def run_programs(verbose: bool, out=sys.stderr) -> tuple[list, int]:
+    from repro.analysis import corpus, rules
+    findings, checked = [], 0
+    for handle in corpus.shipping_programs():
+        got = rules.check_program(handle)
+        findings.extend(got)
+        checked += 1
+        if verbose:
+            status = "ok" if not got else f"{len(got)} finding(s)"
+            print(f"  program {handle.name}: {status}", file=out)
+    return findings, checked
+
+
+def run_kernels(verbose: bool, out=sys.stderr) -> tuple[list, int]:
+    from repro.analysis import corpus, rules
+    findings, checked = [], 0
+    for kc in corpus.shipping_kernels():
+        got = rules.check_kernel(kc)
+        findings.extend(got)
+        checked += 1
+        if verbose:
+            status = "ok" if not got else f"{len(got)} finding(s)"
+            print(f"  kernel {kc.name}: {status}", file=out)
+    return findings, checked
+
+
+def run_selftest(verbose: bool, out=sys.stderr) -> bool:
+    """Mutant corpus gate: each rule fires on its seed, never on the
+    near-miss. Returns True when the analyzer passes its own test."""
+    from repro.analysis import corpus
+    ok = True
+    for mutant in corpus.MUTANTS:
+        got = corpus.run_mutant(mutant)
+        fired = any(f.rule == mutant.rule for f in got)
+        if mutant.fires:
+            good = fired
+            expect = f"must fire {mutant.rule}"
+        else:
+            good = not got          # near-miss: NO findings at all
+            expect = "must stay quiet"
+        ok &= good
+        mark = "ok" if good else "FAIL"
+        if verbose or not good:
+            print(f"  mutant {mutant.name} ({expect}): {mark} "
+                  f"[{len(got)} finding(s)]", file=out)
+    return ok
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="fleetlint: static SPMD/pallas analysis over the "
+                    "shipping program corpus")
+    ap.add_argument("--all", action="store_true",
+                    help="programs + kernels (default)")
+    ap.add_argument("--programs", action="store_true")
+    ap.add_argument("--kernels", action="store_true")
+    ap.add_argument("--selftest", action="store_true",
+                    help="run the known-bad mutant corpus instead")
+    ap.add_argument("--json", action="store_true", dest="as_json")
+    ap.add_argument("--verbose", action="store_true")
+    ap.add_argument("--waive", action="append", default=[],
+                    metavar="RULE:SUBSTR",
+                    help="silence findings of RULE whose program or "
+                         "provenance contains SUBSTR (repeatable)")
+    args = ap.parse_args(argv)
+    waivers = _parse_waivers(args.waive)
+
+    if args.selftest:
+        ok = run_selftest(args.verbose)
+        print("fleetlint selftest:", "PASS" if ok else "FAIL")
+        return 0 if ok else 1
+
+    do_programs = args.programs or args.all or not args.kernels
+    do_kernels = args.kernels or args.all or not args.programs
+    findings, checked = [], {}
+    if do_programs:
+        got, n = run_programs(args.verbose)
+        findings += got
+        checked["programs"] = n
+    if do_kernels:
+        got, n = run_kernels(args.verbose)
+        findings += got
+        checked["kernels"] = n
+
+    live = [f for f in findings if not _is_waived(f, waivers)]
+    waived = [f for f in findings if _is_waived(f, waivers)]
+
+    if args.as_json:
+        print(json.dumps({
+            "checked": checked,
+            "findings": [f.to_json() for f in live],
+            "waived": [f.to_json() for f in waived],
+        }, indent=2))
+    else:
+        for f in waived:
+            print(f"waived  {f}")
+        for f in live:
+            print(str(f))
+        scope = ", ".join(f"{n} {k}" for k, n in checked.items())
+        verdict = "clean" if not live else f"{len(live)} finding(s)"
+        print(f"fleetlint: {scope} checked — {verdict}"
+              + (f" ({len(waived)} waived)" if waived else ""))
+    return 1 if live else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -28,7 +28,7 @@ import shutil
 import threading
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any
 
 import jax
 import numpy as np
@@ -57,16 +57,16 @@ class CheckpointManager:
     # -- save ---------------------------------------------------------------
 
     def save_async(self, step: int, tree: Any,
-                   extra: Optional[Dict] = None) -> Future:
+                   extra: dict | None = None) -> Future:
         """Non-blocking: the device_get happens in the worker thread, so it
         overlaps whatever the main thread enqueues next (the storage-window
         trick)."""
         return self._pool.submit(self._save, step, tree, extra or {})
 
-    def save(self, step: int, tree: Any, extra: Optional[Dict] = None):
+    def save(self, step: int, tree: Any, extra: dict | None = None):
         return self._save(step, tree, extra or {})
 
-    def _save(self, step: int, tree: Any, extra: Dict):
+    def _save(self, step: int, tree: Any, extra: dict):
         t0 = time.perf_counter()
         flat = jax.tree_util.tree_flatten_with_path(tree)[0]
         arrays = {_leaf_key(path): np.asarray(jax.device_get(leaf))
@@ -94,7 +94,7 @@ class CheckpointManager:
 
     # -- restore ------------------------------------------------------------
 
-    def steps(self) -> List[int]:
+    def steps(self) -> list[int]:
         out = []
         for name in os.listdir(self.dir):
             if name.startswith("step-"):
@@ -103,11 +103,11 @@ class CheckpointManager:
                     out.append(int(name.split("-")[1]))
         return sorted(out)
 
-    def latest_step(self) -> Optional[int]:
+    def latest_step(self) -> int | None:
         s = self.steps()
         return s[-1] if s else None
 
-    def peek(self, step: Optional[int] = None) -> Tuple[int, Dict]:
+    def peek(self, step: int | None = None) -> tuple[int, dict]:
         """Read a snapshot's manifest ``extra`` without touching the
         arrays — compatibility checks (e.g. the Job API's backend guard)
         and feed-seek metadata cost no array I/O."""
@@ -118,8 +118,8 @@ class CheckpointManager:
                                "manifest.json")) as f:
             return step, json.load(f).get("extra", {})
 
-    def restore(self, tree_like: Any, step: Optional[int] = None,
-                shardings: Any = None) -> Tuple[int, Any, Dict]:
+    def restore(self, tree_like: Any, step: int | None = None,
+                shardings: Any = None) -> tuple[int, Any, dict]:
         """tree_like provides structure; shardings (optional pytree of
         NamedSharding) places leaves — restore onto a *different* mesh than
         the one that saved is exactly the elastic-restart path."""
@@ -173,7 +173,7 @@ class FleetCheckpoint:
         self.dir = directory
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
-        self._managers: Dict[str, CheckpointManager] = {}
+        self._managers: dict[str, CheckpointManager] = {}
 
     @staticmethod
     def _safe(name: str) -> str:
@@ -203,7 +203,7 @@ class FleetCheckpoint:
         return (os.path.isdir(d)
                 and self.manager(name).latest_step() is not None)
 
-    def save_state(self, state: Dict) -> str:
+    def save_state(self, state: dict) -> str:
         tmp = os.path.join(self.dir, ".fleet.tmp")
         final = os.path.join(self.dir, self.STATE)
         with open(tmp, "w") as f:
@@ -211,7 +211,7 @@ class FleetCheckpoint:
         os.replace(tmp, final)               # atomic commit
         return final
 
-    def load_state(self) -> Dict:
+    def load_state(self) -> dict:
         path = os.path.join(self.dir, self.STATE)
         assert os.path.isfile(path), f"no fleet state in {self.dir}"
         with open(path) as f:

@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Tuple
 
 
 # ---------------------------------------------------------------------------
@@ -221,8 +220,8 @@ SHAPES = {
 
 @dataclass(frozen=True)
 class MeshConfig:
-    shape: Tuple[int, ...] = (16, 16)
-    axes: Tuple[str, ...] = ("data", "model")
+    shape: tuple[int, ...] = (16, 16)
+    axes: tuple[str, ...] = ("data", "model")
 
     @property
     def n_devices(self) -> int:
@@ -232,7 +231,7 @@ class MeshConfig:
         return n
 
     @property
-    def dp_axes(self) -> Tuple[str, ...]:
+    def dp_axes(self) -> tuple[str, ...]:
         return tuple(a for a in self.axes if a in ("pod", "data"))
 
     @property

@@ -11,7 +11,6 @@ the brief's skip rules:
 from __future__ import annotations
 
 import importlib
-from typing import Dict, List, Tuple
 
 from repro.config import SHAPES, ModelConfig, ShapeConfig
 
@@ -28,7 +27,7 @@ _MODULES = {
     "mamba2-780m": "repro.configs.mamba2_780m",
 }
 
-ARCH_IDS: List[str] = list(_MODULES)
+ARCH_IDS: list[str] = list(_MODULES)
 
 
 def get_config(arch_id: str) -> ModelConfig:
@@ -39,11 +38,11 @@ def get_smoke_config(arch_id: str) -> ModelConfig:
     return importlib.import_module(_MODULES[arch_id]).SMOKE
 
 
-def shape_cells() -> Dict[str, ShapeConfig]:
+def shape_cells() -> dict[str, ShapeConfig]:
     return dict(SHAPES)
 
 
-def cell_status(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+def cell_status(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
     """(runnable, reason)."""
     if shape.name == "long_500k" and not cfg.sub_quadratic:
         return False, ("long_500k requires sub-quadratic attention; "

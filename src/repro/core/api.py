@@ -32,7 +32,6 @@ emit a ``DeprecationWarning``.
 from __future__ import annotations
 
 import warnings
-from typing import Optional
 
 import numpy as np
 
@@ -51,7 +50,7 @@ class MapReduceJob:
             DeprecationWarning, stacklevel=2)
         self.backend = backend
         self._compiled = None
-        self.spec: Optional[JobSpec] = None
+        self.spec: JobSpec | None = None
 
     # -- use-case hooks -----------------------------------------------------
     def map_task(self, task_tokens, repeat):

@@ -24,6 +24,28 @@ def n_levels(n_procs: int) -> int:
     return int(math.ceil(math.log2(max(n_procs, 2))))
 
 
+# Overflow totals accumulate across ranks (psum) and tree levels in int32
+# (jnp.int64 silently degrades to int32 without x64, so widening is not an
+# option here). A wrapped counter could report 0 lost records after losing
+# 2^32 — saturating at INT32_MAX keeps the "0 means exact" contract.
+SAT_MAX = jnp.iinfo(jnp.int32).max
+
+
+def sat_add_i32(a, b):
+    """Saturating int32 add for non-negative operands: wrap -> SAT_MAX."""
+    s = a + b
+    return jnp.where(s < a, jnp.int32(SAT_MAX), s)
+
+
+def _sat_psum(x, axis: str, n_procs: int):
+    """psum of non-negative int32 counts that cannot wrap: each rank's
+    contribution is pre-clamped to SAT_MAX // P so the P-way sum stays
+    inside int32; a clamped contribution already means the true total
+    saturates."""
+    cap = jnp.int32(SAT_MAX // max(n_procs, 1))
+    return lax.psum(jnp.minimum(x.astype(jnp.int32), cap), axis)
+
+
 def tree_combine(keys, vals, axis: str, n_procs: int, overflow=None):
     """Run the merge tree inside a shard_map region.
 
@@ -38,13 +60,14 @@ def tree_combine(keys, vals, axis: str, n_procs: int, overflow=None):
     W-wide merge of two runs whose key union exceeds W truncates the
     union, and that loss used to vanish silently at the next level.
     The count is psum-replicated, so every rank returns the same value
-    and a 0 guarantees the rank-0 records are exact.
+    and a 0 guarantees the rank-0 records are exact. It saturates at
+    ``SAT_MAX`` instead of wrapping, so a huge loss can never read as 0.
     """
     W = keys.shape[0]
     rank = lax.axis_index(axis)
     if overflow is None:
         overflow = jnp.int32(0)
-    total = lax.psum(overflow.astype(jnp.int32), axis)
+    total = _sat_psum(overflow, axis, n_procs)
     for level in range(n_levels(n_procs)):
         stride = 1 << level
         perm = [(i + stride, i) for i in range(0, n_procs, stride * 2)
@@ -58,7 +81,7 @@ def tree_combine(keys, vals, axis: str, n_procs: int, overflow=None):
                                        jnp.concatenate([vals, rv]), W)
         lost = jnp.where(is_receiver,
                          jnp.maximum(n_union.astype(jnp.int32) - W, 0), 0)
-        total = total + lax.psum(lost, axis)
+        total = sat_add_i32(total, _sat_psum(lost, axis, n_procs))
         keys = jnp.where(is_receiver, mk, keys)
         vals = jnp.where(is_receiver, mv, vals)
     return keys, vals, total

@@ -38,7 +38,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Any, Dict, Optional, Union
+from typing import Any
 
 import numpy as np
 
@@ -67,7 +67,7 @@ class JobConfig:
     stealing: bool = False    # device-side work stealing inside the engine
                               #   scan (core/steal.py) — fine-grained
                               #   rebalancing under the host re-planner
-    partitioner: Union[str, Partitioner] = "hash"
+    partitioner: str | Partitioner = "hash"
                               # reduce-side key→owner strategy
                               #   (core/partition.py): "hash" (static
                               #   modulo rule), "sampled" (balanced owner
@@ -79,7 +79,7 @@ class JobConfig:
 @dataclass(frozen=True)
 class JobResult:
     """Structured outcome of a job."""
-    records: Dict[int, int]   # engine output: {key: reduced value}
+    records: dict[int, int]   # engine output: {key: reduced value}
     output: Any               # usecase.finalize(records)
     keys: np.ndarray          # rank-0 sorted keys (sentinel padded)
     values: np.ndarray
@@ -121,7 +121,7 @@ class CombineOverflowError(RuntimeError):
     distinct keys the job produces (0 defaults to the full window,
     which can never overflow)."""
 
-    def __init__(self, result: "JobResult"):
+    def __init__(self, result: JobResult):
         self.result = result
         super().__init__(
             f"Combine overflow: {result.combine_overflow} record(s) were "
@@ -133,7 +133,7 @@ class CombineOverflowError(RuntimeError):
 
 
 def submit(config: JobConfig, dataset, *, mesh=None, repeats=None,
-           prefetch: bool = True, feed_budget=None) -> "JobHandle":
+           prefetch: bool = True, feed_budget=None) -> JobHandle:
     """Plan ``dataset`` (a DataSource, or a 1-D int32 array auto-wrapped
     into one) onto the mesh and return a handle. Nothing executes — and
     nothing beyond one segment is read — until ``step()`` or ``result()``.
@@ -193,7 +193,7 @@ class JobHandle:
     """
 
     def __init__(self, config, backend: Backend, spec, mesh, plan,
-                 feed: SegmentFeed, partitioner: Optional[Partitioner] = None):
+                 feed: SegmentFeed, partitioner: Partitioner | None = None):
         self.config = config
         self.backend = backend
         self.spec = spec
@@ -208,7 +208,7 @@ class JobHandle:
         self._owner_ready = False   # sampled owner map installed (or a
                                     #   snapshot's map adopted by restore)
         self._wall = 0.0
-        self._result: Optional[JobResult] = None
+        self._result: JobResult | None = None
 
     # -- resource lifecycle -------------------------------------------------
 
@@ -218,7 +218,7 @@ class JobHandle:
         thread)."""
         self.feed.close()
 
-    def __enter__(self) -> "JobHandle":
+    def __enter__(self) -> JobHandle:
         return self
 
     def __exit__(self, *exc):
@@ -350,7 +350,7 @@ class JobHandle:
         self._ensure_segmented()
         return self._advance(n_segments)
 
-    def replan(self, task_id_grid) -> "JobHandle":
+    def replan(self, task_id_grid) -> JobHandle:
         """Install a re-planned (P, W) assignment of the *unread* tasks
         (from ``repro.ft.straggler``); each task keeps its compute-repeat
         factor, so results stay exact by construction."""
@@ -387,7 +387,7 @@ class JobHandle:
                    "task_ids": self.feed.task_ids_grid.tolist(),
                    "repeats": self.feed.repeats_grid.tolist()})
 
-    def restore(self, manager, step: Optional[int] = None) -> "JobHandle":
+    def restore(self, manager, step: int | None = None) -> JobHandle:
         """Resume from a snapshot taken by :meth:`checkpoint` (possibly in
         a previous process): install the carry, then *seek* the feed to
         the saved cursor/assignment — no segment read is ever replayed.
@@ -433,7 +433,7 @@ class JobHandle:
                        repeats=extra.get("repeats"))
         return self
 
-    def load(self, carry, cursor: int) -> "JobHandle":
+    def load(self, carry, cursor: int) -> JobHandle:
         """Install an in-memory carry snapshot (elastic/straggler paths).
         The snapshot's owner map comes with it — no re-sample."""
         self._ensure_segmented()

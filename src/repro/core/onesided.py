@@ -25,7 +25,7 @@ paper's "window sync after each Map task" storage-window checkpoints).
 from __future__ import annotations
 
 from functools import partial
-from typing import Callable
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
@@ -183,6 +183,15 @@ class OneSidedBackend:
                 in_specs=(P, P, P), out_specs=(P, P))))
         keys, vals = fn(tokens, task_ids, repeats)
         return jax.device_get(keys)[0], jax.device_get(vals)[0]
+
+    def trace_handles(self, spec: JobSpec, map_fn: Callable, mesh,
+                      seg_tasks: int = 2, tag: str = ""):
+        """Traceable :class:`~repro.core.registry.ProgramHandle`\\ s for
+        fleetlint (repro.analysis) — the segmented triple plus the
+        replication contract the steal protocol relies on."""
+        from repro.core.registry import segment_program_handles
+        return segment_program_handles(self, spec, map_fn, mesh,
+                                       seg_tasks=seg_tasks, tag=tag)
 
     def make_segment_fns(self, spec: JobSpec, map_fn: Callable, mesh):
         """(init_fn, segment_fn, finish_fn) — the checkpointable path.

@@ -34,7 +34,7 @@ partitioner mismatch exactly like the ``stealing`` flag.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Protocol, Tuple, Union, runtime_checkable
+from typing import Protocol, runtime_checkable
 
 import jax.numpy as jnp
 import numpy as np
@@ -50,7 +50,7 @@ class Partitioner(Protocol):
     needs_sample: bool      # True -> submit runs the planner pre-pass
 
     def build(self, hist: np.ndarray,
-              n_procs: int) -> Tuple[np.ndarray, np.ndarray]:
+              n_procs: int) -> tuple[np.ndarray, np.ndarray]:
         """(owner_map, owner_split) int32 arrays of shape (vocab,).
 
         ``hist[key]`` is the sampled load proxy (tasks containing the
@@ -144,7 +144,7 @@ def available_partitioners():
     return sorted(_NAMED)
 
 
-def resolve_partitioner(p: Union[str, Partitioner]) -> Partitioner:
+def resolve_partitioner(p: str | Partitioner) -> Partitioner:
     """Name or instance -> instance, with a clear error on unknowns."""
     if isinstance(p, str):
         if p not in _NAMED:

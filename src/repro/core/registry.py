@@ -20,7 +20,8 @@ from __future__ import annotations
 
 import importlib
 from dataclasses import dataclass, field
-from typing import Callable, Dict, Protocol, Tuple, runtime_checkable
+from collections.abc import Callable
+from typing import Protocol, runtime_checkable
 
 # built-in engines register lazily on first resolution so importing the
 # registry stays cheap (no jax compile machinery pulled in for --help paths)
@@ -28,7 +29,7 @@ _BUILTIN_MODULES = {
     "1s": "repro.core.onesided",
     "2s": "repro.core.twosided",
 }
-_REGISTRY: Dict[str, type] = {}
+_REGISTRY: dict[str, type] = {}
 
 
 @dataclass(frozen=True)
@@ -72,7 +73,7 @@ class Backend(Protocol):
     name: str
 
     def run_job(self, spec: JobSpec, map_fn: MapFn, mesh, tokens,
-                task_ids, repeats) -> Tuple:
+                task_ids, repeats) -> tuple:
         """Blocking end-to-end run. tokens: (P, T, S); task_ids/repeats:
         (P, T). Returns rank-0 (keys, values) host arrays."""
         ...
@@ -106,7 +107,7 @@ def _ensure_builtins():
             importlib.import_module(module)
 
 
-_INSTANCES: Dict[str, "Backend"] = {}
+_INSTANCES: dict[str, Backend] = {}
 
 
 def get_backend(name: str) -> Backend:
@@ -124,7 +125,88 @@ def get_backend(name: str) -> Backend:
     return _INSTANCES[name]
 
 
-def memoized(cache: Dict, key, builder):
+# ---------------------------------------------------------------------------
+# traceable program handles (consumed by repro.analysis — fleetlint)
+# ---------------------------------------------------------------------------
+
+# The engines' replication contract, by flattened argument/output path.
+# Everything here is *asserted* replicated across ranks by the engine
+# design (psum-maintained progress rows, carried owner maps, psum'd
+# overflow totals); fleetlint's REP001 rule proves it from the jaxpr.
+ENGINE_REPLICATED_CARRY = ("carry.status", "carry.cursor", "carry.work",
+                           "carry.stolen", "carry.owner_map",
+                           "carry.owner_split")
+
+
+@dataclass(frozen=True)
+class ProgramHandle:
+    """One traceable SPMD program: enough to ``jax.make_jaxpr`` it and to
+    interpret the flattened inputs/outputs by name.
+
+    ``fn(*args)`` must be traceable with ``args`` (ShapeDtypeStructs are
+    fine — nothing executes). ``arg_paths``/``out_paths`` name the
+    *flattened* (tree-leaf order) inputs/outputs; ``replicated_in`` /
+    ``replicated_out`` are the subset the backend asserts replicated
+    across ``allowed_axes`` — the analyzer's REP001 obligation."""
+    name: str
+    fn: Callable
+    args: tuple
+    arg_paths: tuple[str, ...]
+    out_paths: tuple[str, ...]
+    replicated_in: tuple[str, ...] = ()
+    replicated_out: tuple[str, ...] = ()
+    allowed_axes: tuple[str, ...] = ("procs",)
+
+
+def segment_program_handles(backend: Backend, spec: JobSpec,
+                            map_fn: MapFn, mesh, seg_tasks: int = 2,
+                            tag: str = "") -> tuple[ProgramHandle, ...]:
+    """Build :class:`ProgramHandle`\\ s for a backend's segmented triple.
+
+    Shared by every backend whose segmented path speaks
+    :class:`~repro.core.windows.EngineCarry` (both built-ins do); a
+    backend with a different carry overrides ``trace_handles`` wholesale.
+    Nothing is executed — args are ShapeDtypeStructs and the carry
+    structure comes from ``jax.eval_shape(init_fn)``.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.windows import EngineCarry
+
+    init_fn, seg_fn, fin_fn = backend.make_segment_fns(spec, map_fn, mesh)
+    carry_shapes = jax.eval_shape(init_fn)
+    P, S = spec.n_procs, spec.task_size
+    tok = jax.ShapeDtypeStruct((P, seg_tasks, S), jnp.int32)
+    tid = jax.ShapeDtypeStruct((P, seg_tasks), jnp.int32)
+    rep = jax.ShapeDtypeStruct((P, seg_tasks), jnp.int32)
+
+    carry_paths = tuple(f"carry.{f}" for f in EngineCarry._fields)
+    if not tag:
+        fn_name = getattr(map_fn, "__name__", "map_fn")
+        tag = f"{backend.name}/{fn_name}"
+    return (
+        ProgramHandle(
+            name=f"{tag}/init", fn=init_fn, args=(),
+            arg_paths=(), out_paths=carry_paths,
+            replicated_out=ENGINE_REPLICATED_CARRY),
+        ProgramHandle(
+            name=f"{tag}/segment", fn=seg_fn,
+            args=(carry_shapes, tok, tid, rep),
+            arg_paths=carry_paths + ("tokens", "task_ids", "repeats"),
+            out_paths=carry_paths,
+            replicated_in=ENGINE_REPLICATED_CARRY,
+            replicated_out=ENGINE_REPLICATED_CARRY),
+        ProgramHandle(
+            name=f"{tag}/finish", fn=fin_fn, args=(carry_shapes,),
+            arg_paths=carry_paths,
+            out_paths=("keys", "values", "combine_overflow"),
+            replicated_in=ENGINE_REPLICATED_CARRY,
+            replicated_out=("combine_overflow",)),
+    )
+
+
+def memoized(cache: dict, key, builder):
     """Tiny jit-program memo helper for backends; falls back to building
     uncached when the key is unhashable."""
     try:

@@ -53,8 +53,8 @@ from __future__ import annotations
 import time
 from collections import defaultdict
 from dataclasses import asdict, dataclass
-from typing import (Callable, Dict, List, Optional, Protocol, Sequence,
-                    Union, runtime_checkable)
+from collections.abc import Callable, Sequence
+from typing import Protocol, runtime_checkable
 
 import numpy as np
 
@@ -98,14 +98,14 @@ class ScheduledJob:
     priority: int
     seq: int                     # admission order (FIFO key)
     handle: JobHandle
-    on_slice: Optional[Callable] = None
+    on_slice: Callable | None = None
     state: str = QUEUED
     segments_run: int = 0
     work_done: int = 0
     wall: float = 0.0            # host seconds across this job's slices
     submitted_at: float = 0.0    # perf_counter stamps
-    finished_at: Optional[float] = None
-    error: Optional[BaseException] = None
+    finished_at: float | None = None
+    error: BaseException | None = None
 
     @property
     def ready(self) -> bool:
@@ -122,7 +122,7 @@ class SchedulePolicy(Protocol):
     name: str
 
     def pick(self, candidates: Sequence[ScheduledJob],
-             tenants: Dict[str, TenantStats]) -> ScheduledJob:
+             tenants: dict[str, TenantStats]) -> ScheduledJob:
         ...
 
 
@@ -164,11 +164,11 @@ _POLICIES = {p.name: p for p in (FifoPolicy, FairSharePolicy,
                                  PriorityPolicy)}
 
 
-def available_policies() -> List[str]:
+def available_policies() -> list[str]:
     return sorted(_POLICIES)
 
 
-def resolve_policy(policy: Union[str, SchedulePolicy]) -> SchedulePolicy:
+def resolve_policy(policy: str | SchedulePolicy) -> SchedulePolicy:
     if isinstance(policy, str):
         if policy not in _POLICIES:
             raise ValueError(f"unknown policy {policy!r}; available: "
@@ -202,10 +202,10 @@ class JobScheduler:
     slice_segments: segments per time slice (1 = finest interleaving).
     """
 
-    def __init__(self, *, policy: Union[str, SchedulePolicy] = "fair",
-                 mesh=None, max_pending: Optional[int] = None,
-                 max_active: Optional[int] = None,
-                 max_live_bytes: Optional[int] = None,
+    def __init__(self, *, policy: str | SchedulePolicy = "fair",
+                 mesh=None, max_pending: int | None = None,
+                 max_active: int | None = None,
+                 max_live_bytes: int | None = None,
                  slice_segments: int = 1):
         self.policy = resolve_policy(policy)
         self.mesh = mesh
@@ -214,18 +214,18 @@ class JobScheduler:
         self.slice_segments = int(slice_segments)
         self.budget = (FeedBudget(max_live_bytes)
                        if max_live_bytes else None)
-        self.jobs: List[ScheduledJob] = []
-        self.tenants: Dict[str, TenantStats] = defaultdict(TenantStats)
-        self.run_started_at: Optional[float] = None
-        self._by_name: Dict[str, ScheduledJob] = {}
-        self._programs: Dict = {}        # (backend, spec, map_fn) -> fns
-        self._n_procs: Optional[int] = None
+        self.jobs: list[ScheduledJob] = []
+        self.tenants: dict[str, TenantStats] = defaultdict(TenantStats)
+        self.run_started_at: float | None = None
+        self._by_name: dict[str, ScheduledJob] = {}
+        self._programs: dict = {}        # (backend, spec, map_fn) -> fns
+        self._n_procs: int | None = None
 
     # -- admission -----------------------------------------------------------
 
     def submit(self, config: JobConfig, dataset, *, priority: int = 0,
-               tenant: str = "default", name: Optional[str] = None,
-               on_slice: Optional[Callable] = None,
+               tenant: str = "default", name: str | None = None,
+               on_slice: Callable | None = None,
                repeats=None) -> JobHandle:
         """Admit a job; returns its :class:`JobHandle` (nothing executes
         until :meth:`run_until_complete`; after it, ``handle.result()``
@@ -285,13 +285,13 @@ class JobScheduler:
         assert self.run_started_at is not None
         return j.finished_at - self.run_started_at
 
-    def results(self) -> Dict[str, JobResult]:
+    def results(self) -> dict[str, JobResult]:
         """Results of every completed job (failed jobs carry their
         exception on ``scheduler[name].error`` instead)."""
         return {j.name: j.handle.result()
                 for j in self.jobs if j.state == DONE}
 
-    def stats(self) -> Dict:
+    def stats(self) -> dict:
         """JSON-able snapshot of fleet accounting."""
         return {
             "policy": self.policy.name,
@@ -370,9 +370,9 @@ class JobScheduler:
             job.on_slice(h, SliceStats(seconds=dt, segments=segs,
                                        work_per_rank=work))
 
-    def run_until_complete(self, *, max_slices: Optional[int] = None,
+    def run_until_complete(self, *, max_slices: int | None = None,
                            raise_on_error: bool = False
-                           ) -> Dict[str, JobResult]:
+                           ) -> dict[str, JobResult]:
         """Drive the fleet until every job is done or failed (or
         ``max_slices`` slices ran — resumable: call again to continue).
         A failing job is isolated: its feed is closed, its error kept on
@@ -420,7 +420,7 @@ class JobScheduler:
         })
         return fleet
 
-    def restore(self, fleet) -> "JobScheduler":
+    def restore(self, fleet) -> JobScheduler:
         """Resume a fleet snapshot into *this* scheduler: re-``submit``
         the same jobs (same names/configs/datasets) first, then restore.
         Every job that was live at snapshot time seeks its feed to its

@@ -37,7 +37,6 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import lru_cache, partial
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -55,7 +54,7 @@ STEAL_MARGIN = 1
 
 
 def claim_step(head: jnp.ndarray, tail: jnp.ndarray, work: jnp.ndarray,
-               margin: int = STEAL_MARGIN) -> Tuple[jnp.ndarray, ...]:
+               margin: int = STEAL_MARGIN) -> tuple[jnp.ndarray, ...]:
     """One scheduling round of the work-stealing claim.
 
     ``head``/``tail`` are the per-rank cursors into each rank's own
@@ -108,7 +107,7 @@ def claim_step(head: jnp.ndarray, tail: jnp.ndarray, work: jnp.ndarray,
     return src_rank, src_col, head, tail
 
 
-def segment_cursors(task_ids: jnp.ndarray, axis: Optional[str] = None):
+def segment_cursors(task_ids: jnp.ndarray, axis: str | None = None):
     """Initial (head, tail) rows for one segment grid.
 
     ``tail`` counts each rank's *real* columns (padding id ``-1`` is
@@ -164,7 +163,7 @@ def _jitted_claim(margin: int):
 
 def steal_schedule(task_ids: np.ndarray, repeats: np.ndarray,
                    margin: int = STEAL_MARGIN,
-                   work0: Optional[np.ndarray] = None) -> StealSchedule:
+                   work0: np.ndarray | None = None) -> StealSchedule:
     """Replay :func:`claim_step` over one (P, n) assignment grid.
 
     This is bit-identical to the schedule the device scan realizes (it

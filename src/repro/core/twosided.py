@@ -25,7 +25,7 @@ MR-1S, with the in-flight ``pending_*`` buffers simply left empty.
 from __future__ import annotations
 
 from functools import partial
-from typing import Callable
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
@@ -109,6 +109,14 @@ class TwoSidedBackend:
                 out_specs=(P(AXIS), P(AXIS)))))
         keys, vals = fn(tokens, task_ids, repeats)
         return jax.device_get(keys)[0], jax.device_get(vals)[0]
+
+    def trace_handles(self, spec: JobSpec, map_fn: Callable, mesh,
+                      seg_tasks: int = 2, tag: str = ""):
+        """Traceable :class:`~repro.core.registry.ProgramHandle`\\ s for
+        fleetlint (repro.analysis)."""
+        from repro.core.registry import segment_program_handles
+        return segment_program_handles(self, spec, map_fn, mesh,
+                                       seg_tasks=seg_tasks, tag=tag)
 
     def make_segment_fns(self, spec: JobSpec, map_fn: Callable, mesh):
         """Segmented 2S: each segment runs bulk-synchronously (map-all,

@@ -29,7 +29,7 @@ scenario instead of per-subclass.
 """
 from __future__ import annotations
 
-from typing import Protocol, Tuple, runtime_checkable
+from typing import Protocol, runtime_checkable
 
 import jax.numpy as jnp
 from jax import lax
@@ -42,7 +42,7 @@ class UseCase(Protocol):
     window: int
 
     def map_emit(self, tokens: jnp.ndarray,
-                 task_id: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                 task_id: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
         ...
 
 

@@ -19,7 +19,6 @@ backends, balanced or not.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict
 
 import jax.numpy as jnp
 import numpy as np
@@ -45,7 +44,7 @@ class WordCount:
         return tokens, jnp.where(valid, 1, 0).astype(jnp.int32)
 
 
-def wordcount_oracle(tokens, vocab: int) -> Dict[int, int]:
+def wordcount_oracle(tokens, vocab: int) -> dict[int, int]:
     """numpy reference: exact counts over the whole input."""
     tokens = np.asarray(tokens)
     tokens = tokens[tokens != int(KEY_SENTINEL)]
@@ -78,7 +77,7 @@ class Histogram:
         keys = jnp.where(valid, bins, KEY_SENTINEL)
         return keys, jnp.where(valid, 1, 0).astype(jnp.int32)
 
-    def finalize(self, records: Dict[int, int]) -> np.ndarray:
+    def finalize(self, records: dict[int, int]) -> np.ndarray:
         out = np.zeros((self.n_bins,), np.int64)
         for b, c in records.items():
             out[b] = c
@@ -121,9 +120,9 @@ class InvertedIndex:
         keys = jnp.where(hit, doc * len(self.queries) + qidx, KEY_SENTINEL)
         return keys.astype(jnp.int32), jnp.where(hit, 1, 0).astype(jnp.int32)
 
-    def finalize(self, records: Dict[int, int]) -> Dict[int, Dict[int, int]]:
+    def finalize(self, records: dict[int, int]) -> dict[int, dict[int, int]]:
         """{query_token: {doc: term_frequency}} — sparse posting lists."""
-        out: Dict[int, Dict[int, int]] = {int(t): {} for t in self.queries}
+        out: dict[int, dict[int, int]] = {int(t): {} for t in self.queries}
         Q = len(self.queries)
         for k, v in records.items():
             doc, qidx = divmod(int(k), Q)

@@ -46,10 +46,10 @@ class DenseWindow(NamedTuple):
     table: jnp.ndarray          # (vocab,) value dtype
 
     @staticmethod
-    def alloc(vocab: int, dtype=jnp.int32) -> "DenseWindow":
+    def alloc(vocab: int, dtype=jnp.int32) -> DenseWindow:
         return DenseWindow(jnp.zeros((vocab,), dtype))
 
-    def put(self, keys, values) -> "DenseWindow":
+    def put(self, keys, values) -> DenseWindow:
         """Fold a chunk of records (the receive side of a one-sided put)."""
         valid = keys != KEY_SENTINEL
         idx = jnp.where(valid, keys, 0)
@@ -68,13 +68,13 @@ class SortedWindow(NamedTuple):
     values: jnp.ndarray         # (capacity,)
 
     @staticmethod
-    def alloc(capacity: int, dtype=jnp.int32) -> "SortedWindow":
+    def alloc(capacity: int, dtype=jnp.int32) -> SortedWindow:
         return SortedWindow(
             jnp.full((capacity,), KEY_SENTINEL, jnp.int32),
             jnp.zeros((capacity,), dtype),
         )
 
-    def put(self, keys, values) -> "SortedWindow":
+    def put(self, keys, values) -> SortedWindow:
         from repro.core.kv import merge_sorted
         k, v = merge_sorted(self.keys, self.values, keys, values,
                             self.keys.shape[0])

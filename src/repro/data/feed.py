@@ -40,7 +40,6 @@ from __future__ import annotations
 import threading
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Optional, Tuple
 
 import numpy as np
 
@@ -124,7 +123,7 @@ class SegmentFeed:
     def __init__(self, source, plan, task_ids: np.ndarray,
                  repeats: np.ndarray, segment: int,
                  *, sharding=None, prefetch: bool = True,
-                 budget: Optional[FeedBudget] = None):
+                 budget: FeedBudget | None = None):
         self.source = source
         self.plan = plan
         self.segment = int(segment)
@@ -137,7 +136,7 @@ class SegmentFeed:
         self._budget = budget
         self._budget_key = None                        # held reservation
         self._gen = 0                                  # seek/replan epoch
-        self._pending: Optional[Tuple[int, int, Future]] = None
+        self._pending: tuple[int, int, Future] | None = None
         self._pool = ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="segment-feed")
         self._closed = False

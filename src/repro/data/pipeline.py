@@ -14,7 +14,7 @@ LM-training batch pipeline.
 """
 from __future__ import annotations
 
-from typing import Iterator, Optional
+from collections.abc import Iterator
 
 import jax
 import numpy as np
@@ -50,7 +50,7 @@ class DoubleBufferedLoader:
 
 
 def lm_batches(tokens: np.ndarray, batch: int, seq: int, *,
-               n_steps: Optional[int] = None, seed: int = 0,
+               n_steps: int | None = None, seed: int = 0,
                skip: int = 0):
     """Yield {tokens, labels} LM batches from a flat token stream.
 

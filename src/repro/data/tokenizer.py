@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import re
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, List
+from collections.abc import Iterable
 
 import numpy as np
 
@@ -22,17 +22,17 @@ _WORD = re.compile(rb"[A-Za-z0-9']+")
 UNK = 0
 
 
-def words_of(data: bytes) -> List[bytes]:
+def words_of(data: bytes) -> list[bytes]:
     return _WORD.findall(data)
 
 
 @dataclass
 class Vocab:
     """word <-> id mapping. id 0 is <unk>."""
-    words: List[bytes] = field(default_factory=list)
+    words: list[bytes] = field(default_factory=list)
 
     def __post_init__(self):
-        self._index: Dict[bytes, int] = {
+        self._index: dict[bytes, int] = {
             w: i + 1 for i, w in enumerate(self.words)}
 
     @property
@@ -46,7 +46,7 @@ class Vocab:
         return b"<unk>" if i == 0 else self.words[i - 1]
 
     @staticmethod
-    def from_counts(counts: Dict[bytes, int], max_size: int) -> "Vocab":
+    def from_counts(counts: dict[bytes, int], max_size: int) -> Vocab:
         top = sorted(counts.items(), key=lambda kv: (-kv[1], kv[0]))
         return Vocab([w for w, _ in top[: max_size - 1]])
 

@@ -26,7 +26,7 @@ work — recorded in DESIGN.md).
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Dict
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -52,7 +52,7 @@ def _stage_fwd(cfg: ModelConfig, blocks_loc, x, positions, *, remat):
     return x
 
 
-def gpipe_loss_fn(cfg: ModelConfig, params: Dict, batch: Dict, *, mesh,
+def gpipe_loss_fn(cfg: ModelConfig, params: dict, batch: dict, *, mesh,
                   n_microbatches: int, stage_axis: str = "pod",
                   remat: str = "full"):
     """Pipeline-parallel loss over the ``stage_axis``.
@@ -167,7 +167,7 @@ def make_pp_train_step(cfg: ModelConfig, tcfg, *, mesh,
         cfg, p, b, mesh=mesh, n_microbatches=n_microbatches,
         stage_axis=stage_axis, remat=tcfg.remat_policy))
 
-    def train_step(state: TrainState, batch: Dict):
+    def train_step(state: TrainState, batch: dict):
         (loss, metrics), grads = jax.value_and_grad(
             lambda p: loss_jit(p, batch), has_aux=True)(state.params)
         new_params, new_opt, om = adamw_update(state.params, grads,

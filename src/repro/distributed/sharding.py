@@ -16,7 +16,7 @@ launch/ agree on one source of truth.
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P

@@ -16,7 +16,6 @@ mesh: ``CheckpointManager.restore(shardings=new)`` re-shards every leaf;
 """
 from __future__ import annotations
 
-from typing import List, Tuple
 
 import numpy as np
 
@@ -49,7 +48,7 @@ def fold_windows(tables: np.ndarray, n_new: int) -> np.ndarray:
     return out
 
 
-def surviving_ranks(n_procs: int, failed: List[int]) -> List[int]:
+def surviving_ranks(n_procs: int, failed: list[int]) -> list[int]:
     return [r for r in range(n_procs) if r not in set(failed)]
 
 

@@ -26,7 +26,6 @@ leaving transient skew to the in-scan layer.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List
 
 import numpy as np
 
@@ -73,7 +72,7 @@ class ThroughputTracker:
                              self.rate)
 
 
-def rebalance_tasks(task_ids: List[int], rate: np.ndarray,
+def rebalance_tasks(task_ids: list[int], rate: np.ndarray,
                     tasks_per_segment: int) -> np.ndarray:
     """Assign the next segment's tasks proportional to throughput.
 

@@ -1,0 +1,22 @@
+"""One interpret-mode policy for every pallas kernel wrapper.
+
+Every ``kernels/*/ops.py`` used to carry its own ``_on_tpu()`` copy; the
+static analyzer (repro.analysis, rule PAL003) reasons about interpret-mode
+fallbacks, which only works if there is exactly one policy to reason
+about. The contract: wrappers take ``interpret: bool | None = None`` and
+resolve it through :func:`default_interpret` — compiled on TPU hardware,
+interpreter everywhere else, explicit values always win.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def on_tpu() -> bool:
+    """True when the default jax backend is real TPU hardware."""
+    return jax.default_backend() == "tpu"
+
+
+def default_interpret(interpret: bool | None) -> bool:
+    """Resolve a wrapper's ``interpret`` argument against the policy."""
+    return not on_tpu() if interpret is None else interpret

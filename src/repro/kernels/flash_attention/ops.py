@@ -6,11 +6,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.backend import default_interpret
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 @partial(jax.jit, static_argnames=("causal", "window", "interpret",
@@ -19,8 +16,7 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     block_q: int = 512, block_kv: int = 512,
                     interpret: bool | None = None):
     """q: (B, S, H, hd); k/v: (B, Skv, KV, hd). Returns (B, S, H, hd)."""
-    if interpret is None:
-        interpret = not _on_tpu()
+    interpret = default_interpret(interpret)
     B, S, H, hd = q.shape
     _, Skv, KV, _ = k.shape
     # batch-major flatten so kv row = q row // group

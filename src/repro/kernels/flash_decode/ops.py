@@ -5,11 +5,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.backend import default_interpret
 from repro.kernels.flash_decode.kernel import flash_decode_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 @partial(jax.jit, static_argnames=("block_kv", "interpret"))
@@ -17,8 +14,7 @@ def flash_decode(q, k, v, t, *, block_kv: int = 1024,
                  interpret: bool | None = None):
     """q: (B, H, hd); k/v: (B, S, KV, hd); t: scalar current length.
     Returns (B, H, hd)."""
-    if interpret is None:
-        interpret = not _on_tpu()
+    interpret = default_interpret(interpret)
     B, H, hd = q.shape
     _, S, KV, _ = k.shape
     G = H // KV

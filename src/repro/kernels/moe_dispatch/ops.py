@@ -4,15 +4,11 @@ from functools import partial
 
 import jax
 
+from repro.kernels.backend import default_interpret
 from repro.kernels.moe_dispatch.kernel import bucket_slots_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 @partial(jax.jit, static_argnames=("n_experts", "interpret"))
 def bucket_slots(eids, n_experts: int, interpret: bool | None = None):
-    if interpret is None:
-        interpret = not _on_tpu()
-    return bucket_slots_pallas(eids, n_experts, interpret=interpret)
+    return bucket_slots_pallas(eids, n_experts,
+                               interpret=default_interpret(interpret))

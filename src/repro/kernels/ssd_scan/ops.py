@@ -6,11 +6,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.backend import default_interpret
 from repro.kernels.ssd_scan.kernel import ssd_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 @partial(jax.jit, static_argnames=("chunk", "interpret"))
@@ -34,8 +31,7 @@ def ssd(x, dt, A, B, C, *, chunk: int = 256, init_state=None,
         Bb * H, S, N)
     Af = jnp.broadcast_to(A[None, :], (Bb, H)).reshape(Bb * H, 1)
     y, st = ssd_pallas(xf, dtf, Af, Bh, Ch, chunk=chunk,
-                       interpret=interpret
-                       if interpret is not None else not _on_tpu())
+                       interpret=default_interpret(interpret))
     y = y.reshape(Bb, H, S, Pd).transpose(0, 2, 1, 3)
     st = st.reshape(Bb, H, Pd, N)
     if init_state is not None:

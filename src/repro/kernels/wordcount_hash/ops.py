@@ -7,21 +7,16 @@ from functools import partial
 
 import jax
 
+from repro.kernels.backend import default_interpret
 from repro.kernels.wordcount_hash.kernel import hist_pallas
 from repro.kernels.wordcount_hash.ref import hist_ref
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 @partial(jax.jit, static_argnames=("vocab", "hash_mod", "interpret"))
 def wordcount_hist(tokens, vocab: int, hash_mod: int = 0,
                    interpret: bool | None = None):
-    if interpret is None:
-        interpret = not _on_tpu()
     return hist_pallas(tokens, vocab, hash_mod=hash_mod,
-                       interpret=interpret)
+                       interpret=default_interpret(interpret))
 
 
 @partial(jax.jit, static_argnames=("vocab", "hash_mod"))

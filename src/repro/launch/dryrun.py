@@ -29,7 +29,7 @@ import json
 import time
 import traceback
 from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -204,7 +204,7 @@ def build_cell(cfg, shape, mesh, mesh_cfg, *, unroll=False, microbatch=0,
 # lower + compile + measure
 # ---------------------------------------------------------------------------
 
-def _numeric(d) -> Dict[str, float]:
+def _numeric(d) -> dict[str, float]:
     try:
         return {k: float(v) for k, v in dict(d).items()
                 if isinstance(v, (int, float))}
@@ -212,13 +212,13 @@ def _numeric(d) -> Dict[str, float]:
         return {}
 
 
-def lower_compile(fn, args_abs, in_sh, *, want_text=True) -> Dict[str, Any]:
+def lower_compile(fn, args_abs, in_sh, *, want_text=True) -> dict[str, Any]:
     t0 = time.time()
     lowered = jax.jit(fn, in_shardings=in_sh).lower(*args_abs)
     t1 = time.time()
     compiled = lowered.compile()
     t2 = time.time()
-    rec: Dict[str, Any] = {
+    rec: dict[str, Any] = {
         "lower_s": round(t1 - t0, 2), "compile_s": round(t2 - t1, 2)}
     try:
         ma = compiled.memory_analysis()
@@ -265,7 +265,7 @@ def _extrapolate(c11, c21, c12, NB: int, A: int, keys=("flops",)):
 
 def calibrate(cfg: ModelConfig, shape: ShapeConfig, mesh,
               mesh_cfg: MeshConfig, *, microbatch=0, remat=None,
-              sharding="default") -> Dict[str, Any]:
+              sharding="default") -> dict[str, Any]:
     """Unrolled reduced-depth lowerings → exact full-program roofline terms."""
     run = specs_mod.make_run(cfg, shape, mesh_cfg, microbatch=microbatch)
     mb = run.resolved_microbatch()
@@ -314,7 +314,7 @@ def calibrate(cfg: ModelConfig, shape: ShapeConfig, mesh,
 
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              do_calibrate: bool, out_dir: str,
-             variant: str = "base") -> Dict[str, Any]:
+             variant: str = "base") -> dict[str, Any]:
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     v = dict(VARIANTS[variant])
@@ -326,7 +326,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     sharding = v.pop("sharding", "default")
     pipeline = v.pop("pipeline", False)
     mesh_name = "multipod" if multi_pod else "singlepod"
-    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+    rec: dict[str, Any] = {"arch": arch, "shape": shape_name,
                            "mesh": mesh_name, "variant": variant}
     runnable, why = cell_status(cfg, shape)
     if not runnable:

@@ -20,7 +20,6 @@ from __future__ import annotations
 
 import re
 from collections import defaultdict
-from typing import Dict
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
@@ -69,15 +68,15 @@ def _group_size(line: str) -> int:
     return 2  # collective-permute / unknown: factor cancels anyway
 
 
-def collective_bytes(hlo_text: str) -> Dict[str, float]:
+def collective_bytes(hlo_text: str) -> dict[str, float]:
     """Per-device wire bytes + op counts per collective kind.
 
     Returns {kind: bytes, ..., "total": bytes, "n_<kind>": count}.
     Async pairs are counted at -start (last tuple element = output buffer);
     -done lines are skipped.
     """
-    out: Dict[str, float] = defaultdict(float)
-    counts: Dict[str, int] = defaultdict(int)
+    out: dict[str, float] = defaultdict(float)
+    counts: dict[str, int] = defaultdict(int)
     for line in hlo_text.splitlines():
         m = _LINE_RE.search(line)
         if not m:

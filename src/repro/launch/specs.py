@@ -6,7 +6,7 @@ map each abstract tree onto the mesh via distributed/sharding.py rules.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +27,7 @@ def vlm_prefix_len(seq_len: int) -> int:
 
 
 def frontend_geometry(cfg: ModelConfig, shape: ShapeConfig
-                      ) -> Tuple[int, int, int]:
+                      ) -> tuple[int, int, int]:
     """(text_len, frontend_len, enc_len). seq_len budgets the full context
     (image prefix + text for VLM; decoder length for audio)."""
     S = shape.seq_len
@@ -44,7 +44,7 @@ def frontend_geometry(cfg: ModelConfig, shape: ShapeConfig
 # input specs (ShapeDtypeStruct)
 # ---------------------------------------------------------------------------
 
-def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
     """Batch stand-ins for train/prefill; decode uses decode_input_specs."""
     B = shape.global_batch
     S_text, S_f, _ = frontend_geometry(cfg, shape)
@@ -122,7 +122,7 @@ def state_shardings(cfg: ModelConfig, mesh, mesh_cfg: MeshConfig,
     )
 
 
-def _cache_leaf_spec(name: str, shape: Tuple[int, ...], cfg: ModelConfig,
+def _cache_leaf_spec(name: str, shape: tuple[int, ...], cfg: ModelConfig,
                      mesh_cfg: MeshConfig, dp) -> P:
     tp = mesh_cfg.tp_size
     if name in ("k", "v", "cross_k", "cross_v"):     # (B, S, KV, hd)

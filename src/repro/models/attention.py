@@ -20,7 +20,6 @@ from __future__ import annotations
 
 import math
 from functools import partial
-from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -37,7 +36,7 @@ NEG_INF = -1e30
 # params
 # ---------------------------------------------------------------------------
 
-def init_attention(cfg: ModelConfig, key, cross: bool = False) -> Dict:
+def init_attention(cfg: ModelConfig, key, cross: bool = False) -> dict:
     d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
     dt = jnp.dtype(cfg.param_dtype)
     ks = jax.random.split(key, 6)
@@ -58,7 +57,7 @@ def init_attention(cfg: ModelConfig, key, cross: bool = False) -> Dict:
     return p
 
 
-def init_mla(cfg: ModelConfig, key) -> Dict:
+def init_mla(cfg: ModelConfig, key) -> dict:
     d, H = cfg.d_model, cfg.n_heads
     nope, rope_d, v_d = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
     lora = cfg.kv_lora_rank
@@ -264,7 +263,7 @@ def _decode_partials(q, k, v, kv_pos, t):
     return o, l, m
 
 
-def combine_partials(o, l, m, axis: Optional[str]):
+def combine_partials(o, l, m, axis: str | None):
     """Combine (o, l, m) partials across ``axis`` (None -> single shard)."""
     if axis is None:
         return (o / jnp.maximum(l, 1e-30)[..., None])
@@ -331,7 +330,7 @@ def update_cache_sharded(cache, new, t, *, mesh, dp_entry,
 # full attention layer (projections + modes)
 # ---------------------------------------------------------------------------
 
-def _qkv(cfg: ModelConfig, p: Dict, x, kv_x=None):
+def _qkv(cfg: ModelConfig, p: dict, x, kv_x=None):
     B, S, _ = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
     kv_x = x if kv_x is None else kv_x
@@ -350,7 +349,7 @@ def _qkv(cfg: ModelConfig, p: Dict, x, kv_x=None):
     return q, k, v
 
 
-def attention_forward(cfg: ModelConfig, p: Dict, x, positions, *,
+def attention_forward(cfg: ModelConfig, p: dict, x, positions, *,
                       causal=True, use_pallas=False, unroll=False):
     """Train / prefill pass. Returns (out, (k, v)) — k/v feed the cache."""
     q, k, v = _qkv(cfg, p, x)
@@ -375,7 +374,7 @@ def _rope_bshd(x, positions, theta):
     return xt.swapaxes(1, 2)
 
 
-def attention_decode(cfg: ModelConfig, p: Dict, x, cache: Dict, t, *,
+def attention_decode(cfg: ModelConfig, p: dict, x, cache: dict, t, *,
                      mesh=None, dp_entry=None):
     """One-token decode. x: (B, 1, D); cache {"k","v"}: (B, S_max, KV, hd)."""
     B = x.shape[0]
@@ -431,7 +430,7 @@ def _mla_expand(cfg, p, ckv):
     return kv[..., :nope], kv[..., nope:]
 
 
-def mla_forward(cfg: ModelConfig, p: Dict, x, positions, *, use_pallas=False,
+def mla_forward(cfg: ModelConfig, p: dict, x, positions, *, use_pallas=False,
                 unroll=False):
     B, S, _ = x.shape
     H = cfg.n_heads
@@ -460,7 +459,7 @@ def mla_forward(cfg: ModelConfig, p: Dict, x, positions, *, use_pallas=False,
     return o @ p["wo"], cache
 
 
-def mla_decode(cfg: ModelConfig, p: Dict, x, cache: Dict, t, *,
+def mla_decode(cfg: ModelConfig, p: dict, x, cache: dict, t, *,
                mesh=None, dp_entry=None):
     """Absorbed MLA decode over the compressed cache (B, S_max, lora+rope)."""
     from jax.sharding import PartitionSpec as P

@@ -5,7 +5,6 @@ contract — see distributed/sharding.py), ``apply_*`` consumes them.
 """
 from __future__ import annotations
 
-from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -25,13 +24,13 @@ def _init(key, shape, scale, dtype):
 # norms
 # ---------------------------------------------------------------------------
 
-def init_norm(cfg: ModelConfig, key) -> Dict:
+def init_norm(cfg: ModelConfig, key) -> dict:
     if cfg.norm_type == "nonparam_ln":      # OLMo: no scale/bias
         return {}
     return {"scale": jnp.ones((cfg.d_model,), dtype_of(cfg))}
 
 
-def apply_norm(cfg: ModelConfig, p: Dict, x: jnp.ndarray) -> jnp.ndarray:
+def apply_norm(cfg: ModelConfig, p: dict, x: jnp.ndarray) -> jnp.ndarray:
     xf = x.astype(jnp.float32)
     if cfg.norm_type == "layernorm" or cfg.norm_type == "nonparam_ln":
         mu = jnp.mean(xf, -1, keepdims=True)
@@ -76,7 +75,7 @@ def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
 # MLP (SwiGLU)
 # ---------------------------------------------------------------------------
 
-def init_mlp(cfg: ModelConfig, key, d_ff: int = 0) -> Dict:
+def init_mlp(cfg: ModelConfig, key, d_ff: int = 0) -> dict:
     d, ff = cfg.d_model, (d_ff or cfg.d_ff)
     dt = jnp.dtype(cfg.param_dtype)
     k1, k2, k3 = jax.random.split(key, 3)
@@ -89,7 +88,7 @@ def init_mlp(cfg: ModelConfig, key, d_ff: int = 0) -> Dict:
     }
 
 
-def apply_mlp(p: Dict, x: jnp.ndarray) -> jnp.ndarray:
+def apply_mlp(p: dict, x: jnp.ndarray) -> jnp.ndarray:
     g = jax.nn.silu(x @ p["w_gate"])
     h = x @ p["w_in"]
     return (g * h) @ p["w_out"]
@@ -99,7 +98,7 @@ def apply_mlp(p: Dict, x: jnp.ndarray) -> jnp.ndarray:
 # embeddings / head
 # ---------------------------------------------------------------------------
 
-def init_embed(cfg: ModelConfig, key) -> Dict:
+def init_embed(cfg: ModelConfig, key) -> dict:
     dt = jnp.dtype(cfg.param_dtype)
     k1, k2 = jax.random.split(key)
     p = {"embed_tokens": _init(k1, (cfg.vocab_size, cfg.d_model), 0.02, dt)}
@@ -109,11 +108,11 @@ def init_embed(cfg: ModelConfig, key) -> Dict:
     return p
 
 
-def embed_tokens(cfg: ModelConfig, p: Dict, tokens: jnp.ndarray):
+def embed_tokens(cfg: ModelConfig, p: dict, tokens: jnp.ndarray):
     return p["embed_tokens"][tokens]
 
 
-def unembed(cfg: ModelConfig, p: Dict, x: jnp.ndarray):
+def unembed(cfg: ModelConfig, p: dict, x: jnp.ndarray):
     if cfg.tie_embeddings:
         return x @ p["embed_tokens"].T
     return x @ p["lm_head"]

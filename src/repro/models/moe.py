@@ -22,7 +22,6 @@ sharded over "model" (EP), batch over the data axes.
 from __future__ import annotations
 
 from functools import partial
-from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,7 +35,7 @@ from repro.models.layers import _init
 EP_AXIS = "model"
 
 
-def init_moe(cfg: ModelConfig, key) -> Dict:
+def init_moe(cfg: ModelConfig, key) -> dict:
     d = cfg.d_model
     ffe = cfg.d_ff_expert or cfg.d_ff
     E = cfg.n_experts
@@ -303,7 +302,7 @@ def _dispatch_replicated(cfg, p, x_flat, ids, gates, E_loc, axis):
 # the MoE layer
 # ---------------------------------------------------------------------------
 
-def moe_forward(cfg: ModelConfig, p: Dict, x, *, mesh=None, dp_entry=None,
+def moe_forward(cfg: ModelConfig, p: dict, x, *, mesh=None, dp_entry=None,
                 unroll: bool = False):
     """x: (B, S, D). Returns (y, aux_loss). When ``mesh`` is None the layer
     runs unpartitioned (smoke tests); otherwise inside a mesh-wide shard_map

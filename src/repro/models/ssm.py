@@ -17,7 +17,6 @@ The Pallas kernel (kernels/ssd_scan) implements the same chunked algorithm;
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -124,7 +123,7 @@ def ssd_decode_step(state, x_t, dt_t, A, B_t, C_t):
 # the full block (projections, conv, gating)
 # ---------------------------------------------------------------------------
 
-def init_ssm(cfg: ModelConfig, key) -> Dict:
+def init_ssm(cfg: ModelConfig, key) -> dict:
     d, di = cfg.d_model, cfg.d_inner
     G, N, K = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_conv
     H = cfg.n_ssm_heads
@@ -161,7 +160,7 @@ def _causal_conv(u, w, carry=None):
     return jax.nn.silu(out), new_carry
 
 
-def ssm_forward(cfg: ModelConfig, p: Dict, x, *, use_pallas=False,
+def ssm_forward(cfg: ModelConfig, p: dict, x, *, use_pallas=False,
                 init_state=None, conv_carry=None):
     """x: (B, S, D) -> (B, S, D), cache {"state","conv_x","conv_B","conv_C"}."""
     B_, S, _ = x.shape
@@ -194,7 +193,7 @@ def ssm_forward(cfg: ModelConfig, p: Dict, x, *, use_pallas=False,
     return y @ p["w_out"], cache
 
 
-def ssm_decode(cfg: ModelConfig, p: Dict, x, cache: Dict):
+def ssm_decode(cfg: ModelConfig, p: dict, x, cache: dict):
     """One-token step. x: (B, 1, D)."""
     B_ = x.shape[0]
     H, Pd = cfg.n_ssm_heads, cfg.ssm_head_dim

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +41,7 @@ from repro.models.layers import (apply_mlp, apply_norm, cross_entropy,
 # layer typing — which sublayers layer i carries
 # ---------------------------------------------------------------------------
 
-def layer_kind(cfg: ModelConfig, i: int) -> Tuple[str, str]:
+def layer_kind(cfg: ModelConfig, i: int) -> tuple[str, str]:
     """(mixer, ff) for absolute layer index i.
 
     mixer: "attn" | "mla" | "ssm";  ff: "mlp" | "moe" | "none"
@@ -62,10 +62,10 @@ def layer_kind(cfg: ModelConfig, i: int) -> Tuple[str, str]:
 # init
 # ---------------------------------------------------------------------------
 
-def _init_layer(cfg: ModelConfig, key, i: int, cross: bool = False) -> Dict:
+def _init_layer(cfg: ModelConfig, key, i: int, cross: bool = False) -> dict:
     mixer, ff = layer_kind(cfg, i)
     ks = jax.random.split(key, 6)
-    p: Dict[str, Any] = {"norm1": init_norm(cfg, ks[0])}
+    p: dict[str, Any] = {"norm1": init_norm(cfg, ks[0])}
     if mixer == "attn":
         p["attn"] = attn.init_attention(cfg, ks[1])
     elif mixer == "mla":
@@ -85,17 +85,17 @@ def _init_layer(cfg: ModelConfig, key, i: int, cross: bool = False) -> Dict:
 
 
 def _init_superblock(cfg: ModelConfig, key, first_layer: int,
-                     cross: bool = False) -> Dict:
+                     cross: bool = False) -> dict:
     ks = jax.random.split(key, cfg.block_pattern)
     return {f"layer{j}": _init_layer(cfg, ks[j], first_layer + j, cross)
             for j in range(cfg.block_pattern)}
 
 
-def init_model(cfg: ModelConfig, key) -> Dict:
+def init_model(cfg: ModelConfig, key) -> dict:
     """Full parameter pytree. ``blocks``/``enc_blocks`` subtrees are stacked
     (leading scan dim) — the sharding layer treats them specially."""
     k_emb, k_blocks, k_head, k_dense, k_enc = jax.random.split(key, 5)
-    params: Dict[str, Any] = init_embed(cfg, k_emb)
+    params: dict[str, Any] = init_embed(cfg, k_emb)
 
     # leading dense layers (outside the scan)
     if cfg.first_k_dense:
@@ -132,7 +132,7 @@ def init_model(cfg: ModelConfig, key) -> Dict:
 # single layer forward (train/prefill)
 # ---------------------------------------------------------------------------
 
-def _layer_forward(cfg: ModelConfig, p: Dict, x, positions, i: int, *,
+def _layer_forward(cfg: ModelConfig, p: dict, x, positions, i: int, *,
                    causal: bool, enc_out=None, mesh=None, dp_entry=None,
                    use_pallas: bool = False, unroll: bool = False):
     """Returns (x, cache_dict, aux_loss)."""
@@ -174,7 +174,7 @@ def _layer_forward(cfg: ModelConfig, p: Dict, x, positions, i: int, *,
     return x, cache, aux
 
 
-def _superblock_forward(cfg: ModelConfig, p: Dict, x, positions,
+def _superblock_forward(cfg: ModelConfig, p: dict, x, positions,
                         first_layer: int, *, causal=True, enc_out=None,
                         mesh=None, dp_entry=None, use_pallas=False,
                         want_cache=False, unroll=False):
@@ -221,14 +221,14 @@ def _encoder_forward(cfg: ModelConfig, params, frames, *, use_pallas=False,
     if unroll:
         x = frames
         for i in range(cfg.n_enc_layers):
-            x, _ = body(x, jax.tree.map(lambda a: a[i],
+            x, _ = body(x, jax.tree.map(lambda a, i=i: a[i],
                                         params["enc_blocks"]))
     else:
         x, _ = lax.scan(body, frames, params["enc_blocks"])
     return apply_norm(cfg, params["enc_norm"], x)
 
 
-def forward(cfg: ModelConfig, params, batch: Dict, *, mesh=None,
+def forward(cfg: ModelConfig, params, batch: dict, *, mesh=None,
             dp_entry=None, use_pallas=False, remat="none",
             want_cache: bool = False, unroll: bool = False):
     """Train / prefill forward.
@@ -256,7 +256,7 @@ def forward(cfg: ModelConfig, params, batch: Dict, *, mesh=None,
     positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
 
     aux_total = jnp.float32(0.0)
-    caches: Dict[str, Any] = {}
+    caches: dict[str, Any] = {}
     first = cfg.first_k_dense
     if first:
         dense_caches = {}
@@ -283,7 +283,7 @@ def forward(cfg: ModelConfig, params, batch: Dict, *, mesh=None,
         ys = []
         carry = (x, aux_total)
         for b in range(nb):
-            carry, y = body(carry, jax.tree.map(lambda a: a[b],
+            carry, y = body(carry, jax.tree.map(lambda a, b=b: a[b],
                                                 params["blocks"]))
             ys.append(y)
         (x, aux_total) = carry
@@ -301,7 +301,7 @@ def forward(cfg: ModelConfig, params, batch: Dict, *, mesh=None,
     return logits, aux_total
 
 
-def loss_fn(cfg: ModelConfig, params, batch: Dict, *, mesh=None,
+def loss_fn(cfg: ModelConfig, params, batch: dict, *, mesh=None,
             dp_entry=None, use_pallas=False, remat="none",
             unroll: bool = False):
     logits, aux = forward(cfg, params, batch, mesh=mesh, dp_entry=dp_entry,
@@ -321,7 +321,7 @@ def loss_fn(cfg: ModelConfig, params, batch: Dict, *, mesh=None,
 # ---------------------------------------------------------------------------
 
 def _layer_cache_shape(cfg: ModelConfig, i: int, B: int, S_max: int,
-                       enc_len: int = 0) -> Dict:
+                       enc_len: int = 0) -> dict:
     """abstract zero cache for one layer (decode path)."""
     mixer, _ = layer_kind(cfg, i)
     dt = jnp.dtype(cfg.dtype)
@@ -352,7 +352,7 @@ def _layer_cache_shape(cfg: ModelConfig, i: int, B: int, S_max: int,
 def init_cache(cfg: ModelConfig, B: int, S_max: int, enc_len: int = 0):
     """Stacked decode caches: blocks subtree gains a leading scan dim."""
     first = cfg.first_k_dense
-    cache: Dict[str, Any] = {}
+    cache: dict[str, Any] = {}
     if first:
         cache["dense_layers"] = {
             f"layer{i}": _layer_cache_shape(cfg, i, B, S_max, enc_len)
@@ -368,7 +368,7 @@ def init_cache(cfg: ModelConfig, B: int, S_max: int, enc_len: int = 0):
     return cache
 
 
-def _layer_decode(cfg: ModelConfig, p: Dict, x, cache: Dict, t, i: int, *,
+def _layer_decode(cfg: ModelConfig, p: dict, x, cache: dict, t, i: int, *,
                   mesh=None, dp_entry=None):
     mixer, ff = layer_kind(cfg, i)
     h = apply_norm(cfg, p["norm1"], x)
@@ -438,7 +438,7 @@ def decode_step(cfg: ModelConfig, params, cache, tokens_t, t, *, mesh=None,
     if unroll:
         ys = []
         for b in range(cfg.n_scan_blocks):
-            x, y = body(x, jax.tree.map(lambda a: a[b],
+            x, y = body(x, jax.tree.map(lambda a, b=b: a[b],
                                         (params["blocks"],
                                          cache["blocks"])))
             ys.append(y)
@@ -454,7 +454,7 @@ def decode_step(cfg: ModelConfig, params, cache, tokens_t, t, *, mesh=None,
     return logits, new_cache
 
 
-def prefill(cfg: ModelConfig, params, batch: Dict, *, mesh=None,
+def prefill(cfg: ModelConfig, params, batch: dict, *, mesh=None,
             dp_entry=None, use_pallas=False, unroll: bool = False):
     """Full-sequence forward returning last-token logits. (Cache assembly for
     prefill→decode handoff lives in serve/engine.py; the dry-run's prefill

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Dict, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -27,8 +27,8 @@ from repro.models.transformer import layer_kind
 # prefill cache -> decode cache layout
 # ---------------------------------------------------------------------------
 
-def _convert_layer(cfg: ModelConfig, kind: str, raw: Dict, S: int,
-                   S_max: int) -> Dict:
+def _convert_layer(cfg: ModelConfig, kind: str, raw: dict, S: int,
+                   S_max: int) -> dict:
     """raw prefill cache (seq length S) -> decode layout (capacity S_max)."""
     out = {}
     if kind == "ssm":
@@ -57,11 +57,11 @@ def _convert_layer(cfg: ModelConfig, kind: str, raw: Dict, S: int,
     return out
 
 
-def prefill_to_decode_cache(cfg: ModelConfig, caches: Dict, S: int,
-                            S_max: int) -> Dict:
+def prefill_to_decode_cache(cfg: ModelConfig, caches: dict, S: int,
+                            S_max: int) -> dict:
     """Convert ``forward(want_cache=True)`` output to ``decode_step`` layout."""
     first = cfg.first_k_dense
-    out: Dict[str, Any] = {}
+    out: dict[str, Any] = {}
     if first:
         out["dense_layers"] = {
             f"layer{i}": _convert_layer(
@@ -123,7 +123,7 @@ class ServeEngine:
             want_cache=True))
 
     def generate(self, prompts: np.ndarray, n_new: int, *,
-                 frontend_embeds: Optional[np.ndarray] = None,
+                 frontend_embeds: np.ndarray | None = None,
                  greedy: bool = True, temperature: float = 1.0,
                  seed: int = 0):
         """prompts: (B, S_prompt) int32 (same length; pad upstream).

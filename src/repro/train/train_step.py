@@ -16,7 +16,7 @@ model stay GSPMD-automatic), grads quantize before the cross-pod psum.
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Dict, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -70,7 +70,7 @@ def _accumulate_grads(cfg, tcfg, run, params, batch, *, mesh, dp_entry,
         carry = (zeros, jnp.float32(0.0))
         for a in range(A):
             carry, metrics = acc_step(
-                carry, jax.tree.map(lambda x: x[a], batch_r))
+                carry, jax.tree.map(lambda x, a=a: x[a], batch_r))
         gsum, lsum = carry
     else:
         (gsum, lsum), ms = lax.scan(acc_step, (zeros, jnp.float32(0.0)),
@@ -87,7 +87,7 @@ def make_train_step(cfg: ModelConfig, run: RunConfig, *, mesh=None,
     unrolls every scan (cost-exact HLO for the dry-run roofline)."""
     tcfg = run.train
 
-    def train_step(state: TrainState, batch: Dict):
+    def train_step(state: TrainState, batch: dict):
         grads, loss, metrics = _accumulate_grads(
             cfg, tcfg, run, state.params, batch, mesh=mesh,
             dp_entry=dp_entry, unroll=unroll)

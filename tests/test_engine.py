@@ -291,3 +291,55 @@ def test_tree_combine_overflow_detected_at_merge_levels(devices8):
         print("TREE-OVERFLOW-OK")
     """)
     assert "TREE-OVERFLOW-OK" in out
+
+
+def test_tree_combine_overflow_saturates_past_int31(devices8):
+    """Regression at >2^31 synthetic counts: 8 ranks each seeding 2^30
+    lost records sum to 2^33 — the old int32 psum wrapped that to
+    exactly 0, i.e. a catastrophic loss reported as \"exact\". The
+    saturating accumulation must instead pin the total near INT32_MAX,
+    identically on every rank."""
+    out = devices8("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.core.combine import SAT_MAX, tree_combine
+        from repro.core.kv import KEY_SENTINEL
+        from repro.distributed.collectives import shard_map
+        from repro.distributed.mesh import local_mesh
+        mesh = local_mesh((8,), ("procs",))
+        W = 16
+        keys = np.full((8, W), int(KEY_SENTINEL), np.int32)
+        vals = np.zeros((8, W), np.int32)
+
+        def body(k, v):
+            kk, vv, of = tree_combine(k[0], v[0], "procs", 8,
+                                      overflow=jnp.int32(2 ** 30))
+            return kk[None], vv[None], of[None]
+
+        fn = jax.jit(shard_map(body, mesh=mesh,
+                               in_specs=(P("procs"), P("procs")),
+                               out_specs=(P("procs"), P("procs"),
+                                          P("procs"))))
+        _, _, of = fn(keys, vals)
+        of = np.asarray(of)
+        # every rank agrees (psum-replicated) ...
+        assert (of == of[0]).all(), of
+        # ... and the 2^33 true loss saturates (per-rank contributions
+        # clamp to SAT_MAX // 8) instead of wrapping to 0
+        assert of[0] == 8 * (SAT_MAX // 8), of
+        print("SAT-OK", int(of[0]))
+    """)
+    assert "SAT-OK" in out
+
+
+def test_sat_add_i32_saturates_instead_of_wrapping():
+    import jax.numpy as jnp
+    from repro.core.combine import SAT_MAX, sat_add_i32
+    a = jnp.int32(SAT_MAX - 5)
+    assert int(sat_add_i32(a, jnp.int32(10))) == SAT_MAX
+    assert int(sat_add_i32(jnp.int32(3), jnp.int32(4))) == 7
+    assert int(sat_add_i32(jnp.int32(0), a)) == SAT_MAX - 5
+    # elementwise too (the psum contributions are arrays)
+    got = sat_add_i32(jnp.asarray([SAT_MAX, 1], jnp.int32),
+                      jnp.asarray([1, 1], jnp.int32))
+    assert got.tolist() == [SAT_MAX, 2]

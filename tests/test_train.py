@@ -43,8 +43,11 @@ def test_grad_accum_matches_single_batch():
     np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]),
                                rtol=1e-5)
     for a, b in zip(jax.tree.leaves(st1.params), jax.tree.leaves(st4.params)):
+        # accumulation order differs between the scan and the full batch;
+        # float32 reduction noise also shifts with the host device count,
+        # so the tolerance leaves headroom over the 1-device case
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
-                                   atol=1e-5, rtol=1e-4)
+                                   atol=5e-5, rtol=1e-4)
 
 
 def test_loss_decreases_overfit():
@@ -64,7 +67,8 @@ def test_remat_policies_same_loss_and_grads():
     vals = {}
     for pol in ("none", "dots", "full"):
         (loss, _), grads = jax.value_and_grad(
-            lambda p: loss_fn(cfg, p, batch, remat=pol), has_aux=True)(params)
+            lambda p, pol=pol: loss_fn(cfg, p, batch, remat=pol),
+            has_aux=True)(params)
         vals[pol] = (float(loss), grads)
     for pol in ("dots", "full"):
         np.testing.assert_allclose(vals[pol][0], vals["none"][0], rtol=1e-6)
