@@ -117,6 +117,40 @@ CHECKS: dict[str, dict] = {
                          "criteria.fair_jain_beats_fifo",
                          "criteria.priority_favors_high"],
     },
+    "fig13": {
+        "fresh": "fig13_elastic.json",
+        "baseline": "BENCH_elastic.json",
+        "required": ["P", "P_new", "K", "kill_tick",
+                     "clean.wall_s", "recover.wall_s", "restart.wall_s",
+                     "recover.recoveries",
+                     "criteria.mttr_s",
+                     "criteria.recovery_overhead_pct",
+                     "criteria.restart_overhead_pct",
+                     "criteria.recovery_win_vs_restart_pct",
+                     "criteria.records_equal",
+                     "criteria.all_jobs_elastic_restored",
+                     "criteria.recovery_beats_restart"],
+        "gates": [
+            # surviving a mid-run kill (re-mesh + re-executed
+            # since-last-snapshot suffix) may cost at most 75 points
+            # more over the clean run than the committed trajectory
+            # shows — the smoke fleet is tiny (P=2 -> 1, so the
+            # survivors also have half the compute), so only a
+            # structural blowup (fold recompiling per job, snapshots
+            # re-read per tick) is signal
+            ("criteria.recovery_overhead_pct", "max", 75.0),
+        ],
+        "require_true": [
+            # exactness is the whole game: every job in every campaign
+            # record-identical to its solo run, kills included
+            "criteria.records_equal",
+            # the kill was survived WITHOUT resubmission — every job
+            # came back via elastic restore, none from scratch
+            "criteria.all_jobs_elastic_restored",
+            # and restoring beat the restart-from-scratch discipline
+            "criteria.recovery_beats_restart",
+        ],
+    },
 }
 
 

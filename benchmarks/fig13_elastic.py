@@ -1,0 +1,253 @@
+"""Fig 13 — elastic recovery: re-mesh a live fleet vs restart it.
+
+The paper's fault-tolerance argument (storage windows, ~4.8% overhead,
+Fig 5) covers snapshot *cost*; this benchmark measures what the
+snapshots buy when ranks actually die. A K-job fleet runs at P under
+``repro.fleet.FleetSupervisor`` three times, with solo-run exactness
+baselines for every job:
+
+  * **clean**    — no faults: the supervised wall-time floor;
+  * **recover**  — a mid-run kill shrinks the mesh (P -> P_new); every
+    job is elastic-restored from its latest fleet snapshot
+    (``repro.fleet.remesh``: windows folded with saturating adds,
+    checksum-verified, tasks re-bucketized — no job is resubmitted by
+    the user) and the fleet finishes on the survivors;
+  * **restart**  — same kill, same checkpoint cadence, but the
+    snapshots are IGNORED at recovery (``restore_on_remesh=False``):
+    every uncollected job restarts FROM SCRATCH on the survivors — the
+    recovery discipline a non-elastic framework is reduced to, at
+    identical checkpointing cost.
+
+Reported: MTTR (the re-mesh itself: fold + re-bucketize + re-admission),
+recovery overhead over clean, restart overhead over clean, and the
+recovery-vs-restart win. Engine programs for both mesh sizes are warmed
+before any timed campaign, so the numbers isolate the recovery
+*mechanism* (state fold + re-executed suffix) from one-time jit cost —
+the steady-state story for a long-lived fleet. Exactness is asserted,
+not assumed: every job in every campaign must be record-identical to
+its solo run, kills included.
+
+Artifacts: ``results/fig13_elastic.json`` + repo-root
+``BENCH_elastic.json``.
+
+    PYTHONPATH=src python benchmarks/fig13_elastic.py [--quick|--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+try:
+    from benchmarks.common import REPO, run_py, save_json
+except ImportError:                      # invoked as a script from benchmarks/
+    from common import REPO, run_py, save_json
+
+# Parameters are prepended as plain assignments (P, P_NEW, K, TASK, SEG,
+# BASE_TOK, CKPT_EVERY) — no str.format, the code below is brace-heavy.
+REAL_CODE = """
+import json
+import sys
+import tempfile
+import time
+import numpy as np
+from repro.core import JobConfig, submit
+from repro.core.usecases import Histogram, WordCount
+from repro.distributed.mesh import make_mesh
+from repro.fleet import FaultEvent, FaultPlan, FleetSupervisor
+from repro.ft.elastic import remesh_fleet
+
+VOCAB = 512
+rng = np.random.default_rng(13)
+USECASES = [WordCount(vocab=VOCAB), Histogram(vocab=VOCAB, n_bins=64)]
+# uniform job sizes: every job must still be LIVE at the mid-run kill,
+# so the recover/restart arms compare on identical uncollected sets
+jobs = {}
+for k in range(K):
+    jobs[f"job-{k}"] = (USECASES[k % len(USECASES)],
+                        rng.integers(0, VOCAB, size=BASE_TOK)
+                        .astype(np.int32))
+
+_t0 = time.perf_counter()
+
+
+def stage(msg):
+    print(f"[{time.perf_counter() - _t0:7.1f}s] {msg}",
+          file=sys.stderr, flush=True)
+
+
+def cfg(uc, P_run):
+    return JobConfig(usecase=uc, backend="1s", task_size=TASK,
+                     push_cap=256, segment=SEG, n_procs=P_run)
+
+
+# solo exactness baselines + engine warm-up for BOTH mesh sizes (the
+# campaigns then measure the recovery mechanism, not one-time jit)
+solo = {}
+for P_run in (P, P_NEW):
+    mesh = make_mesh(remesh_fleet(P_run))
+    for name, (uc, toks) in jobs.items():
+        res = submit(cfg(uc, P_run), toks, mesh=mesh).result()
+        if P_run == P:
+            solo[name] = res.records
+        stage(f"solo {name} @P={P_run}")
+
+kill_ranks = tuple(range(P - P_NEW))
+
+
+# warm the remesh path itself (fold programs for every table width,
+# snapshot save/restore) with a throwaway killed mini-fleet, so the
+# timed campaigns see steady-state recovery cost, not first-call jit
+with tempfile.TemporaryDirectory() as d:
+    warm = FleetSupervisor(
+        n_procs=P, ckpt_dir=d, ckpt_every=1, slices_per_tick=1,
+        plan=FaultPlan((FaultEvent(2, "kill", ranks=kill_ranks),)))
+    for name, (uc, toks) in jobs.items():
+        warm.submit(cfg(uc, P), toks[:TASK * P * SEG * 4], name=name)
+    warm.run(max_ticks=100000)
+    warm.close()
+    assert not warm.failed and warm.recoveries, "warm-up fleet broke"
+stage("warm-up kill fleet")
+
+
+def campaign(ckpt_every, kill_tick=None, restore=True):
+    events = []
+    if kill_tick is not None:
+        events.append(FaultEvent(kill_tick, "kill", ranks=kill_ranks))
+    with tempfile.TemporaryDirectory() as d:
+        sup = FleetSupervisor(n_procs=P, ckpt_dir=d,
+                              plan=FaultPlan(tuple(events)),
+                              ckpt_every=ckpt_every, slices_per_tick=4,
+                              restore_on_remesh=restore)
+        for name, (uc, toks) in jobs.items():
+            sup.submit(cfg(uc, P), toks, name=name)
+        t0 = time.perf_counter()
+        res = sup.run(max_ticks=100000)
+        wall = time.perf_counter() - t0
+        sup.close()
+    assert not sup.failed, sup.failed
+    stage(f"campaign ckpt={ckpt_every} kill={kill_tick} "
+          f"restore={restore}: {wall:.2f}s, {sup.ticks_run} ticks")
+    exact = all(res[n].records == solo[n] for n in jobs)
+    return dict(
+        wall_s=wall, ticks=sup.ticks_run, exact=bool(exact),
+        final_p=sup.n_procs,
+        recoveries=[dict(tick=r.tick, p_old=r.p_old, p_new=r.p_new,
+                         seconds=r.seconds, restored=r.jobs_restored,
+                         scratch=r.jobs_scratch)
+                    for r in sup.recoveries])
+
+
+clean = campaign(ckpt_every=CKPT_EVERY)
+# kill at 2/3 of the clean run: late enough that the restart arm's
+# redone prefix dwarfs single-core scheduler noise, with snapshots
+# guaranteed to exist (ckpt_every ticks have long passed)
+kill_tick = max(2, 2 * clean["ticks"] // 3)
+recover = campaign(ckpt_every=CKPT_EVERY, kill_tick=kill_tick)
+# control arm: identical checkpoint cadence, but snapshots are IGNORED
+# at recovery — every job restarts from scratch on the survivors
+restart = campaign(ckpt_every=CKPT_EVERY, kill_tick=kill_tick,
+                   restore=False)
+assert recover["final_p"] == P_NEW and restart["final_p"] == P_NEW
+print(json.dumps(dict(clean=clean, recover=recover, restart=restart,
+                      kill_tick=kill_tick)))
+"""
+
+
+def measure_real(n_procs: int, p_new: int, k: int, task: int, seg: int,
+                 base_tok: int, ckpt_every: int) -> dict:
+    params = (f"P={n_procs}\nP_NEW={p_new}\nK={k}\nTASK={task}\n"
+              f"SEG={seg}\nBASE_TOK={base_tok}\nCKPT_EVERY={ckpt_every}\n")
+    out = run_py(params + REAL_CODE, n_devices=n_procs)
+    return json.loads(out.strip().splitlines()[-1])
+
+
+def run(quick: bool = False, smoke: bool = False) -> dict:
+    if smoke:
+        n_procs, p_new, k, task, base_tok = 2, 1, 4, 64, 49_152
+    elif quick:
+        n_procs, p_new, k, task, base_tok = 4, 3, 4, 64, 32_768
+    else:
+        # per-job tokens are capped well under the empirical boundary
+        # (~86k at P=6) where XLA's in-process CPU collectives on a
+        # SUBSET mesh of the forced host devices can deadlock at an
+        # all_to_all rendezvous on an oversubscribed single core — a
+        # host-emulation artifact, not an engine property (P=4 and P=8
+        # run the same sizes fine, and fleetlint proves collective
+        # uniformity for these programs)
+        n_procs, p_new, k, task, base_tok = 8, 6, 4, 64, 49_152
+    seg, ckpt_every = 4, 2
+
+    print(f"[fig13] elastic campaigns (P={n_procs} -> {p_new}, K={k}, "
+          f"{base_tok} base tokens)...")
+    real = measure_real(n_procs, p_new, k, task, seg, base_tok,
+                        ckpt_every)
+
+    clean, recover, restart = (real["clean"], real["recover"],
+                               real["restart"])
+    mttr = float(sum(r["seconds"] for r in recover["recoveries"]))
+    rec_over = 100.0 * (recover["wall_s"] / clean["wall_s"] - 1)
+    res_over = 100.0 * (restart["wall_s"] / clean["wall_s"] - 1)
+    win = 100.0 * (1 - recover["wall_s"] / restart["wall_s"])
+    restored = sum(r["restored"] for r in recover["recoveries"])
+    rec = {
+        "P": n_procs, "P_new": p_new, "K": k,
+        "kill_tick": real["kill_tick"],
+        "clean": clean, "recover": recover, "restart": restart,
+        "criteria": {
+            # measured, not assumed: every job in every campaign —
+            # clean, killed+recovered, killed+restarted — matched its
+            # solo records exactly
+            "records_equal": bool(clean["exact"] and recover["exact"]
+                                  and restart["exact"]),
+            # the kill was survived WITHOUT resubmission: every
+            # uncollected job came back via elastic restore
+            "all_jobs_elastic_restored": bool(
+                restored > 0
+                and all(r["scratch"] == 0
+                        for r in recover["recoveries"])),
+            "mttr_s": mttr,
+            "recovery_overhead_pct": rec_over,
+            "restart_overhead_pct": res_over,
+            "recovery_win_vs_restart_pct": win,
+            # the point of the subsystem: folding snapshots onto the
+            # survivors must beat re-running the fleet from scratch
+            "recovery_beats_restart": bool(
+                recover["wall_s"] < restart["wall_s"]),
+        },
+    }
+    path = save_json("fig13_elastic.json", rec)
+    wrote = [path]
+    if not smoke:
+        # only full/quick runs refresh the committed trajectory baseline
+        root = os.path.join(REPO, "BENCH_elastic.json")
+        with open(root, "w") as f:
+            json.dump(rec, f, indent=1)
+        wrote.append(root)
+    print(f"[fig13] P {n_procs}->{p_new}: MTTR {mttr:.2f}s, recovery "
+          f"{rec_over:+.1f}% vs clean (restart {res_over:+.1f}%), "
+          f"win vs restart {win:+.1f}%")
+    print("wrote " + " and ".join(wrote))
+    if not rec["criteria"]["records_equal"]:
+        raise RuntimeError("a supervised job diverged from its solo run "
+                           "— elastic recovery is NOT exact")
+    if not rec["criteria"]["recovery_beats_restart"]:
+        raise RuntimeError(
+            f"elastic recovery ({recover['wall_s']:.2f}s) did not beat "
+            f"restart-from-scratch ({restart['wall_s']:.2f}s)")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller fleet / fewer tokens")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: tiny run, never overwrites the "
+                         "committed baseline")
+    args = ap.parse_args()
+    run(quick=args.quick, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

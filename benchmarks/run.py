@@ -19,20 +19,21 @@ def main(argv=None):
                     help="smaller datasets / fewer repetitions")
     ap.add_argument("--only", default="",
                     help="comma list: fig4,fig5,fig6,fig7,fig8,fig9,fig10,"
-                         "fig11,roofline")
+                         "fig11,fig13,roofline")
     args = ap.parse_args(argv)
     only = set(filter(None, args.only.split(",")))
 
     from benchmarks import (fig4_scaling, fig5_ckpt, fig6_memory,
                             fig7_timeline, fig8_io_overlap, fig9_imbalance,
                             fig10_keyskew, fig11_multitenant,
-                            moe_dispatch_bench, roofline)
+                            fig13_elastic, moe_dispatch_bench, roofline)
     benches = [("fig4", fig4_scaling.run), ("fig5", fig5_ckpt.run),
                ("fig6", fig6_memory.run), ("fig7", fig7_timeline.run),
                ("fig8", fig8_io_overlap.run),
                ("fig9", fig9_imbalance.run),
                ("fig10", fig10_keyskew.run),
                ("fig11", fig11_multitenant.run),
+               ("fig13", fig13_elastic.run),
                ("moe", moe_dispatch_bench.run),
                ("roofline", lambda quick: roofline.run(quick=quick))]
     failed = []

@@ -68,6 +68,11 @@ def shipping_programs(mesh: Mesh | None = None,
                 handles.extend(backend.trace_handles(
                     spec, as_map_fn(usecase), mesh, seg_tasks=seg_tasks,
                     tag=f"{bname}/{cname}{suffix}"))
+    # the elastic re-mesh fold ships through the same gate as the
+    # engines: its replicated-out contract (folded owner map/split +
+    # psum checksum) is exactly what REP001 exists to check
+    from repro.fleet.remesh import remesh_program_handles
+    handles.extend(remesh_program_handles(mesh))
     return handles
 
 
@@ -221,6 +226,27 @@ def _rep001(fires: bool) -> ProgramHandle:
                       replicated_out=("total",))
 
 
+def _rep001_fold(fires: bool) -> ProgramHandle:
+    # the elastic-fold failure mode: each rank's folded-window total
+    # must be dup-summed to become the fleet total. The bad twin
+    # "broadcasts" it around the ring instead — ppermute is a shuffle,
+    # not a replication (every rank ends holding a *different* value),
+    # which the taint rules treat as rank-varying unconditionally.
+    mesh = procs_mesh(1)
+    n = int(mesh.devices.size)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+
+    def bad(x):
+        return lax.ppermute(x.sum()[None], "procs", perm)
+
+    def near(x):
+        return lax.psum(x.sum(), "procs")[None]
+
+    return _sm_handle(f"mutant/rep001-fold/{'bad' if fires else 'near'}",
+                      bad if fires else near, mesh,
+                      replicated_out=("total",))
+
+
 def _copy_kernel(x_ref, o_ref):
     o_ref[...] = x_ref[...]
 
@@ -294,6 +320,10 @@ MUTANTS = (
            lambda: _rep001(True)),
     Mutant("rep001-near", "REP001", False, "program",
            lambda: _rep001(False)),
+    Mutant("rep001-fold-bad", "REP001", True, "program",
+           lambda: _rep001_fold(True)),
+    Mutant("rep001-fold-near", "REP001", False, "program",
+           lambda: _rep001_fold(False)),
     Mutant("pal001-bad", "PAL001", True, "kernel",
            lambda: _pal001(True)),
     Mutant("pal001-near", "PAL001", False, "kernel",

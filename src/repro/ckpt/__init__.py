@@ -1,1 +1,2 @@
-from repro.ckpt.checkpoint import CheckpointManager, FleetCheckpoint
+from repro.ckpt.checkpoint import (CheckpointManager, FleetCheckpoint,
+                                   FleetStateError)

@@ -154,6 +154,17 @@ class CheckpointManager:
         self._pool = ThreadPoolExecutor(max_workers=1)
 
 
+class FleetStateError(RuntimeError):
+    """The fleet manifest (``fleet.json``) is missing or unreadable.
+
+    Raised by :meth:`FleetCheckpoint.load_state` with the directory and
+    the surviving per-job snapshot names in the message — after a crash
+    the per-job snapshots usually survive even when the queue-state
+    commit did not, and an operator (or the elastic supervisor) can
+    still resume each job individually through
+    ``FleetCheckpoint.manager(name)``."""
+
+
 class FleetCheckpoint:
     """Scheduler-level checkpoint root: one :class:`CheckpointManager`
     per job (``<dir>/job-<name>/``) plus a queue-state manifest
@@ -208,14 +219,49 @@ class FleetCheckpoint:
         final = os.path.join(self.dir, self.STATE)
         with open(tmp, "w") as f:
             json.dump(state, f, indent=1)
+            # the rename is only atomic for bytes that reached the disk:
+            # without the fsync a crash can commit an empty/truncated
+            # manifest — exactly the torn state load_state must never see
+            f.flush()
+            os.fsync(f.fileno())
         os.replace(tmp, final)               # atomic commit
         return final
 
+    def has_state(self) -> bool:
+        """True when a committed fleet manifest exists (it may still be
+        unreadable — ``load_state`` raises :class:`FleetStateError` with
+        diagnostics in that case)."""
+        return os.path.isfile(os.path.join(self.dir, self.STATE))
+
+    def _snapshot_names(self) -> list[str]:
+        try:
+            return sorted(n for n in os.listdir(self.dir)
+                          if n.startswith("job-")
+                          and os.path.isdir(os.path.join(self.dir, n)))
+        except OSError:
+            return []
+
     def load_state(self) -> dict:
         path = os.path.join(self.dir, self.STATE)
-        assert os.path.isfile(path), f"no fleet state in {self.dir}"
-        with open(path) as f:
-            return json.load(f)
+        snaps = self._snapshot_names()
+        surviving = (", ".join(snaps) if snaps
+                     else "none — nothing was ever checkpointed here")
+        if not os.path.isfile(path):
+            raise FleetStateError(
+                f"no fleet manifest ({self.STATE}) in {self.dir!r}; "
+                f"surviving per-job snapshot dirs: {surviving}. Jobs can "
+                "still be resumed one at a time via "
+                "FleetCheckpoint.manager(<name>), but queue state "
+                "(policy, tenants, accounting) is gone")
+        try:
+            with open(path) as f:
+                return json.load(f)
+        except ValueError as e:
+            raise FleetStateError(
+                f"fleet manifest {path!r} is unreadable ({e}); surviving "
+                f"per-job snapshot dirs: {surviving}. The manifest commit "
+                "is fsync+rename-atomic, so this file was likely "
+                "corrupted after the fact") from e
 
     def wait(self):
         """Flush every job's async save — call before committing the

@@ -442,6 +442,45 @@ class JobHandle:
         self.feed.seek(int(cursor))
         return self
 
+    def elastic_load(self, table, owner_map, owner_split, task_ids,
+                     repeats) -> JobHandle:
+        """Resume a job that ran at a *different* process count: install
+        windows/owner maps already folded onto this handle's mesh (from
+        ``repro.fleet.remesh`` / ``repro.ft.elastic``) plus the
+        re-bucketized assignment of the not-yet-executed tasks, and seek
+        the feed to column 0 of that new grid.
+
+        Unlike :meth:`load`, the saved carry cannot be adopted wholesale
+        — every rank-shaped leaf (``pending_*``, ``work``, ``stolen``)
+        has the wrong P. A fresh carry at the new P is semantically
+        safe: pending chunks were folded into ``table`` by the caller,
+        the steal progress row only seeds future claims, and the cursor
+        is monotone bookkeeping. Exactness rests on the Combine dup-sum:
+        the folded windows hold every executed record, wherever they
+        now live."""
+        self._ensure_segmented()
+        P, vocab = self.spec.n_procs, self.spec.vocab
+        table = np.ascontiguousarray(np.asarray(table, np.int32))
+        if table.shape != (P, vocab):
+            raise ValueError(
+                f"elastic_load: folded windows have shape {table.shape}, "
+                f"this handle runs (n_procs, window) = {(P, vocab)} — "
+                "fold onto the NEW mesh before loading")
+
+        def per_rank(m):
+            m = np.asarray(m, np.int32)
+            if m.ndim == 1:             # replicated row -> per-rank copies
+                m = np.broadcast_to(m, (P, len(m)))
+            assert m.shape == (P, vocab), m.shape
+            return np.ascontiguousarray(m)
+
+        self._carry = self._carry._replace(
+            table=table, owner_map=per_rank(owner_map),
+            owner_split=per_rank(owner_split))
+        self._owner_ready = True        # folded map IS the map: no sample
+        self.feed.seek(0, task_ids=task_ids, repeats=repeats)
+        return self
+
     # -- completion ---------------------------------------------------------
 
     def result(self) -> JobResult:

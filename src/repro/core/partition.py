@@ -157,6 +157,20 @@ def resolve_partitioner(p: str | Partitioner) -> Partitioner:
     return p
 
 
+def fold_owner_map(owner_map: np.ndarray, owner_split: np.ndarray,
+                   n_new: int) -> tuple[np.ndarray, np.ndarray]:
+    """Project a key→owner assignment onto ``n_new`` ranks (host twin of
+    the device fold in :mod:`repro.fleet.remesh`): owners wrap modulo
+    the new rank count and split widths clamp to it. Any total map is
+    *correct* after a re-mesh — the Combine dup-sum merges records
+    wherever they land — so folding preserves a sampled map's balance
+    intent without re-running the planner pre-pass (which would cost
+    dataset reads exactly when recovery time matters most)."""
+    omap = np.asarray(owner_map, np.int32) % np.int32(n_new)
+    osplit = np.clip(np.asarray(owner_split, np.int32), 1, n_new)
+    return omap, osplit.astype(np.int32)
+
+
 # ---------------------------------------------------------------------------
 # planner pre-pass: sampled key histogram
 # ---------------------------------------------------------------------------

@@ -267,6 +267,29 @@ class JobScheduler:
         self.tenants[tenant]                  # materialize the entry
         return handle
 
+    def evict(self, name: str) -> ScheduledJob:
+        """Remove a job from the scheduler entirely (its feed is closed,
+        its name becomes reusable). This is the heal path's first half:
+        a FAILED job cannot be resubmitted under its own name — the
+        duplicate-name guard exists precisely so two live jobs never
+        share a snapshot directory — so the supervisor evicts the dead
+        admission before re-admitting a fresh handle and restoring it
+        from the per-job snapshot. Returns the evicted record (its
+        accounting is final; tenant totals already include it)."""
+        job = self._by_name.pop(name, None)
+        if job is None:
+            raise KeyError(f"no job named {name!r} to evict")
+        self.jobs.remove(job)
+        job.handle.close()
+        return job
+
+    def close(self):
+        """Stop every job's feed prefetch thread (supervisor teardown /
+        simulated rank loss). Idempotent; results already computed stay
+        readable on their handles."""
+        for j in self.jobs:
+            j.handle.close()
+
     # -- introspection -------------------------------------------------------
 
     def __getitem__(self, name: str) -> ScheduledJob:

@@ -1,0 +1,22 @@
+"""Elastic fleet supervision: fault injection, re-meshing, recovery.
+
+``faults``     — deterministic chaos (:class:`FaultPlan` /
+                 :class:`FaultInjector` / :class:`FaultingSource`);
+``remesh``     — fold a P_old snapshot onto a P_new mesh, exactly
+                 (:func:`elastic_restore`, checksum-verified);
+``supervisor`` — the tick loop that keeps a scheduler fleet live
+                 through all of it (:class:`FleetSupervisor`).
+"""
+from repro.fleet.faults import (FaultEvent, FaultInjector, FaultPlan,
+                                FaultingSource, InjectedIOError)
+from repro.fleet.remesh import (RemeshChecksumError, elastic_restore,
+                                fold_program, remesh_program_handles)
+from repro.fleet.supervisor import (FleetEntry, FleetSupervisor,
+                                    RecoveryRecord)
+
+__all__ = [
+    "FaultEvent", "FaultInjector", "FaultPlan", "FaultingSource",
+    "InjectedIOError", "RemeshChecksumError", "elastic_restore",
+    "fold_program", "remesh_program_handles", "FleetEntry",
+    "FleetSupervisor", "RecoveryRecord",
+]

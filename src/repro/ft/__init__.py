@@ -1,2 +1,3 @@
-from repro.ft.elastic import remesh_plan, fold_windows
+from repro.ft.elastic import (fold_windows, rebucketize_tasks, remesh_fleet,
+                              remesh_plan)
 from repro.ft.straggler import ThroughputTracker, rebalance_tasks

@@ -3,16 +3,23 @@
 What makes this *cheap* in this framework is the paper's own design:
 
   * the task planner is decentralized (rank-indexed round-robin, no master),
-    so reassigning a dead rank's remaining tasks is pure arithmetic;
+    so reassigning a dead rank's remaining tasks is pure arithmetic
+    (``rebucketize_tasks``);
   * the Combine tree dup-sums records by key across *all* ranks, so window
     ownership does not have to be preserved across a re-mesh — any
     distribution of the surviving window state onto the new mesh yields the
     exact result (``fold_windows``). This is the ownership-transfer
     semantics of paper footnote 2, promoted to a fault-tolerance mechanism.
 
+These helpers are the host-side half of the elastic path; the live
+subsystem that drives them — fault injection, failure detection, the
+re-mesh of a whole scheduled fleet — is :mod:`repro.fleet` (the device
+fold program lives in :mod:`repro.fleet.remesh`).
+
 For the LM trainer the analogue is checkpoint restore onto the surviving
 mesh: ``CheckpointManager.restore(shardings=new)`` re-shards every leaf;
-``remesh_plan`` picks the new mesh shape.
+``remesh_plan`` picks the new 2-D mesh shape, ``remesh_fleet`` the
+engine fleet's 1-D one.
 """
 from __future__ import annotations
 
@@ -20,6 +27,9 @@ from __future__ import annotations
 import numpy as np
 
 from repro.config import MeshConfig
+
+I32_MIN = int(np.iinfo(np.int32).min)
+I32_MAX = int(np.iinfo(np.int32).max)      # == repro.core.combine.SAT_MAX
 
 
 def remesh_plan(n_surviving: int, prefer_model: int = 16) -> MeshConfig:
@@ -37,19 +47,76 @@ def remesh_plan(n_surviving: int, prefer_model: int = 16) -> MeshConfig:
     return MeshConfig((data, model), ("data", "model"))
 
 
+def remesh_fleet(n_surviving: int) -> MeshConfig:
+    """The engine fleet's mesh over the survivors — always the 1-D
+    ``("procs",)`` layout the MapReduce engines run on (the trainer's
+    2-D re-layout logic in :func:`remesh_plan` does not apply: there is
+    no model axis to preserve, only the process count changes)."""
+    if n_surviving < 1:
+        raise ValueError(f"no mesh for {n_surviving} surviving device(s)")
+    return MeshConfig((int(n_surviving),), ("procs",))
+
+
 def fold_windows(tables: np.ndarray, n_new: int) -> np.ndarray:
     """Redistribute per-rank dense Key-Value windows (P_old, vocab) onto
-    P_new ranks by summing old tables round-robin. Exact because Combine
-    dup-sums by key across ranks."""
+    P_new ranks by summing old tables round-robin (``out[r % n_new] +=
+    tables[r]``). Exact because Combine dup-sums by key across ranks.
+    Growing (``n_new > P_old``) leaves the extra ranks' windows zero.
+
+    Integer windows saturate at INT32_MAX instead of wrapping — the
+    numpy twin of ``repro.core.combine.sat_add_i32`` (counts are
+    non-negative, so accumulating in int64 and clipping is equivalent to
+    the device's pairwise saturating adds): folding P_old near-full
+    count tables onto fewer ranks used to overflow silently, turning
+    huge counts into garbage that the exactness checks downstream could
+    not attribute."""
+    tables = np.asarray(tables)
     P_old, vocab = tables.shape
-    out = np.zeros((n_new, vocab), tables.dtype)
+    if tables.dtype.kind not in "iu" or tables.dtype.itemsize > 4:
+        # float (trainer state) or already-wide windows: plain fold
+        out = np.zeros((n_new, vocab), tables.dtype)
+        for r in range(P_old):
+            out[r % n_new] += tables[r]
+        return out
+    acc = np.zeros((n_new, vocab), np.int64)
     for r in range(P_old):
-        out[r % n_new] += tables[r]
-    return out
+        acc[r % n_new] += tables[r].astype(np.int64)
+    return np.clip(acc, I32_MIN, I32_MAX).astype(tables.dtype)
 
 
 def surviving_ranks(n_procs: int, failed: list[int]) -> list[int]:
     return [r for r in range(n_procs) if r not in set(failed)]
+
+
+def rebucketize_tasks(task_ids: np.ndarray, repeats: np.ndarray,
+                      cursor: int, n_new: int
+                      ) -> tuple[np.ndarray, np.ndarray]:
+    """Re-plan the not-yet-consumed tasks of a ``(P_old, T)`` assignment
+    onto ``n_new`` ranks: the columns past ``cursor`` are flattened
+    (padding ``-1`` slots dropped), sorted by global task id, and dealt
+    round-robin into a fresh ``(n_new, W)`` grid with ``W =
+    ceil(remaining / n_new)``. Each task keeps its compute-repeat
+    factor, so a re-meshed resume stays exact by construction — the
+    decentralized-planner arithmetic the module docstring promises.
+
+    Returns ``(ids, reps)`` ready for ``SegmentFeed.seek(0, ids, reps)``.
+    """
+    ids = np.asarray(task_ids, np.int32)
+    reps = np.asarray(repeats, np.int32)
+    assert ids.shape == reps.shape, "task/repeat grids must align"
+    mask = ids[:, cursor:] >= 0
+    flat_ids = ids[:, cursor:][mask]
+    flat_reps = reps[:, cursor:][mask]
+    order = np.argsort(flat_ids, kind="stable")
+    flat_ids, flat_reps = flat_ids[order], flat_reps[order]
+    n = len(flat_ids)
+    W = -(-n // n_new) if n else 0
+    grid = np.full((n_new, W), -1, np.int32)
+    greps = np.ones((n_new, W), np.int32)
+    idx = np.arange(n)
+    grid[idx % n_new, idx // n_new] = flat_ids
+    greps[idx % n_new, idx // n_new] = flat_reps
+    return grid, greps
 
 
 def fold_job_windows(handle, n_new: int) -> np.ndarray:

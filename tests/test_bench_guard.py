@@ -41,6 +41,26 @@ FIG11 = {
                  "priority_favors_high": True,
                  "all_jobs_exact": True},
 }
+FIG13 = {
+    "P": 8, "P_new": 6, "K": 4, "kill_tick": 12,
+    "clean": {"wall_s": 4.0, "ticks": 24, "exact": True, "final_p": 8,
+              "recoveries": []},
+    "recover": {"wall_s": 4.8, "ticks": 26, "exact": True, "final_p": 6,
+                "recoveries": [{"tick": 12, "p_old": 8, "p_new": 6,
+                                "seconds": 0.4, "restored": 4,
+                                "scratch": 0}]},
+    "restart": {"wall_s": 7.5, "ticks": 40, "exact": True, "final_p": 6,
+                "recoveries": [{"tick": 12, "p_old": 8, "p_new": 6,
+                                "seconds": 0.1, "restored": 0,
+                                "scratch": 4}]},
+    "criteria": {"records_equal": True,
+                 "all_jobs_elastic_restored": True,
+                 "mttr_s": 0.4,
+                 "recovery_overhead_pct": 20.0,
+                 "restart_overhead_pct": 87.5,
+                 "recovery_win_vs_restart_pct": 36.0,
+                 "recovery_beats_restart": True},
+}
 
 
 @pytest.fixture()
@@ -51,12 +71,13 @@ def dirs(tmp_path):
     baseline.mkdir()
 
     def write(fig8=FIG8, fig9=FIG9, fig10=FIG10, fig11=FIG11,
-              fresh_fig8=None, fresh_fig9=None, fresh_fig10=None,
-              fresh_fig11=None):
+              fig13=FIG13, fresh_fig8=None, fresh_fig9=None,
+              fresh_fig10=None, fresh_fig11=None, fresh_fig13=None):
         (baseline / "BENCH_io_overlap.json").write_text(json.dumps(fig8))
         (baseline / "BENCH_imbalance.json").write_text(json.dumps(fig9))
         (baseline / "BENCH_keyskew.json").write_text(json.dumps(fig10))
         (baseline / "BENCH_multitenant.json").write_text(json.dumps(fig11))
+        (baseline / "BENCH_elastic.json").write_text(json.dumps(fig13))
         (results / "fig8_io_overlap.json").write_text(
             json.dumps(fresh_fig8 if fresh_fig8 is not None else fig8))
         (results / "fig9_imbalance.json").write_text(
@@ -65,6 +86,8 @@ def dirs(tmp_path):
             json.dumps(fresh_fig10 if fresh_fig10 is not None else fig10))
         (results / "fig11_multitenant.json").write_text(
             json.dumps(fresh_fig11 if fresh_fig11 is not None else fig11))
+        (results / "fig13_elastic.json").write_text(
+            json.dumps(fresh_fig13 if fresh_fig13 is not None else fig13))
 
     return str(results), str(baseline), write
 
@@ -76,8 +99,9 @@ def test_clean_artifacts_pass(dirs):
     assert check("fig9", results, baseline) == []
     assert check("fig10", results, baseline) == []
     assert check("fig11", results, baseline) == []
-    assert main(["fig8", "fig9", "fig10", "fig11", "--results", results,
-                 "--baseline", baseline]) == 0
+    assert check("fig13", results, baseline) == []
+    assert main(["fig8", "fig9", "fig10", "fig11", "fig13",
+                 "--results", results, "--baseline", baseline]) == 0
 
 
 def test_missing_fresh_artifact_fails(dirs, tmp_path):
@@ -174,6 +198,34 @@ def test_fig11_gates(dirs):
     write(fresh_fig11=inexact)
     assert any("all_jobs_exact" in e and "expected true" in e
                for e in check("fig11", results, baseline))
+
+
+def test_fig13_gates(dirs):
+    """The elastic guard: recovery overhead over clean may rise at most
+    75pp above baseline (20); exactness, restore-without-resubmission,
+    and recovery-beats-restart are hard-required."""
+    results, baseline, write = dirs
+    ok = copy.deepcopy(FIG13)
+    ok["criteria"]["recovery_overhead_pct"] = 80.0   # within 75pp of 20
+    write(fresh_fig13=ok)
+    assert check("fig13", results, baseline) == []
+    bloated = copy.deepcopy(FIG13)
+    bloated["criteria"]["recovery_overhead_pct"] = 120.0  # breach
+    write(fresh_fig13=bloated)
+    assert any("recovery_overhead_pct" in e
+               for e in check("fig13", results, baseline))
+    # a kill that forces even one from-scratch restart is a hard failure
+    scratched = copy.deepcopy(FIG13)
+    scratched["criteria"]["all_jobs_elastic_restored"] = False
+    write(fresh_fig13=scratched)
+    assert any("all_jobs_elastic_restored" in e and "expected true" in e
+               for e in check("fig13", results, baseline))
+    # recovery slower than restart-from-scratch defeats the subsystem
+    pointless = copy.deepcopy(FIG13)
+    pointless["criteria"]["recovery_beats_restart"] = False
+    write(fresh_fig13=pointless)
+    assert any("recovery_beats_restart" in e
+               for e in check("fig13", results, baseline))
 
 
 def test_fig11_fairness_floor_is_absolute(dirs):

@@ -1,0 +1,442 @@
+"""Elastic fleet subsystem (repro/fleet) + its ft/ckpt satellites.
+
+Fast, single-device half: the deterministic fault machinery
+(plan/injector/source), the host fold arithmetic — including the
+int32-saturation regression near INT32_MAX — re-bucketization, the
+FleetCheckpoint failure diagnostics, and the supervisor's heal and
+terminal-failure paths at P=1.
+
+Slow, 8-device subprocess half: a K=4 fleet at P=8 survives a mid-run
+rank kill and resumes at P=6 with every job record-identical to its
+unfailed solo run, and the full elastic matrix — use-case x {1s,
+1s+steal} x {hash, sampled+split} — folds 8 -> 6 and 8 -> 4 exactly.
+"""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.ckpt import CheckpointManager, FleetStateError, FleetCheckpoint
+from repro.core import JobConfig, submit
+from repro.core.partition import fold_owner_map, hash_owner_map
+from repro.core.usecases import WordCount
+from repro.fleet import (FaultEvent, FaultInjector, FaultPlan,
+                         FaultingSource, FleetSupervisor, InjectedIOError,
+                         RemeshChecksumError, elastic_restore)
+from repro.ft.elastic import (I32_MAX, fold_windows, rebucketize_tasks,
+                              remesh_fleet)
+
+VOCAB = 64
+
+
+def wc_cfg(**kw):
+    base = dict(usecase=WordCount(vocab=VOCAB), backend="1s",
+                task_size=16, push_cap=64, n_procs=1, segment=2)
+    base.update(kw)
+    return JobConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    rng = np.random.default_rng(7)
+    return rng.integers(0, VOCAB, size=1024).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# fold_windows: int32 saturation regression (satellite #1)
+# ---------------------------------------------------------------------------
+
+def test_fold_windows_saturates_instead_of_wrapping():
+    # two near-full int32 count windows folding onto one rank used to
+    # wrap negative; they must pin at INT32_MAX (sat_add_i32 semantics)
+    tables = np.array([[I32_MAX - 5, 10], [7, 20]], np.int32)
+    out = fold_windows(tables, 1)
+    assert out.dtype == np.int32
+    assert out[0, 0] == I32_MAX          # (I32_MAX - 5) + 7 saturates
+    assert out[0, 1] == 30               # small sums stay exact
+
+
+def test_fold_windows_saturation_matches_pairwise_sat_add():
+    # int64-accumulate-then-clip == pairwise saturating adds for
+    # non-negative counts — the documented equivalence with the
+    # device's sat_add_i32, checked here over a random fold
+    rng = np.random.default_rng(0)
+    tables = rng.integers(0, I32_MAX, size=(8, 16)).astype(np.int32)
+    folded = fold_windows(tables, 3)
+
+    def sat_add(a, b):
+        s = (a.astype(np.int64) + b.astype(np.int64))
+        return np.minimum(s, I32_MAX).astype(np.int32)
+
+    for d in range(3):
+        acc = np.zeros((16,), np.int32)
+        for r in range(d, 8, 3):
+            acc = sat_add(acc, tables[r])
+        np.testing.assert_array_equal(folded[d], acc)
+
+
+def test_fold_windows_wide_dtypes_fold_plain():
+    # int64 windows (and floats) are legitimately wide — they must NOT
+    # be clipped into int32 range; the sum-preserving fold still holds
+    tables = np.full((4, 3), np.int64(I32_MAX) * 4, np.int64)
+    out = fold_windows(tables, 2)
+    assert out.dtype == np.int64
+    np.testing.assert_array_equal(out.sum(axis=0), tables.sum(axis=0))
+
+
+# ---------------------------------------------------------------------------
+# rebucketize / owner-map fold / mesh arithmetic
+# ---------------------------------------------------------------------------
+
+def test_rebucketize_covers_remaining_and_keeps_repeats():
+    ids = np.array([[0, 2, 4, -1], [1, 3, 5, 6]], np.int32)
+    reps = np.array([[1, 2, 3, 1], [4, 5, 6, 7]], np.int32)
+    grid, greps = rebucketize_tasks(ids, reps, cursor=1, n_new=3)
+    assert grid.shape == greps.shape == (3, 2)
+    got = {int(t): int(r) for t, r in
+           zip(grid.ravel(), greps.ravel()) if t >= 0}
+    # consumed column 0 (tasks 0, 1) gone; padding -1 dropped
+    assert got == {2: 2, 4: 3, 3: 5, 5: 6, 6: 7}
+
+
+def test_rebucketize_exhausted_assignment_is_empty():
+    ids = np.array([[0, 1], [2, 3]], np.int32)
+    grid, greps = rebucketize_tasks(ids, np.ones_like(ids), 2, 4)
+    assert grid.shape == (4, 0) and greps.shape == (4, 0)
+
+
+def test_fold_owner_map_targets_surviving_ranks():
+    omap = np.arange(8, dtype=np.int32)          # owners 0..7 (P_old=8)
+    osplit = np.array([1, 2, 9, 1, 1, 1, 8, 3], np.int32)
+    om, osp = fold_owner_map(omap, osplit, 3)
+    assert om.max() < 3 and om.min() >= 0
+    np.testing.assert_array_equal(om, omap % 3)
+    assert osp.max() <= 3 and osp.min() >= 1     # split width clipped
+
+
+def test_remesh_fleet_shapes_and_validation():
+    cfg = remesh_fleet(6)
+    assert cfg.shape == (6,) and cfg.axes == ("procs",)
+    with pytest.raises(ValueError, match="no mesh"):
+        remesh_fleet(0)
+
+
+# ---------------------------------------------------------------------------
+# deterministic fault machinery
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_generate_is_seed_deterministic():
+    kw = dict(n_ticks=200, n_procs=8, jobs=("a", "b"), p_kill=0.05)
+    a = FaultPlan.generate(3, **kw)
+    b = FaultPlan.generate(3, **kw)
+    c = FaultPlan.generate(4, **kw)
+    assert a.events == b.events          # same seed -> same campaign
+    assert a.events != c.events
+    assert any(e.kind == "kill" for e in a.events)
+    assert sum(e.kind == "kill" for e in a.events) <= 1   # max_kill
+
+
+def test_fault_event_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultEvent(0, "meteor")
+
+
+def test_injector_delivers_each_event_once_even_late():
+    plan = FaultPlan((FaultEvent(0, "slow", ranks=(0,)),
+                      FaultEvent(2, "kill", ranks=(1,)),
+                      FaultEvent(5, "join", ranks=(1,))))
+    inj = FaultInjector(plan)
+    assert [e.kind for e in inj.poll(0)] == ["slow"]
+    assert inj.poll(1) == []
+    # a supervisor stuck recovering until tick 7 still gets both
+    assert [e.kind for e in inj.poll(7)] == ["kill", "join"]
+    assert inj.poll(7) == [] and inj.pending == ()
+
+
+def test_faulting_source_trips_then_reads_pure(tokens):
+    from repro.data.source import ArraySource
+    src = FaultingSource(ArraySource(tokens), name="t")
+    clean = np.array(src.read(16, 8))
+    src.trip(2)
+    for _ in range(2):
+        with pytest.raises(InjectedIOError, match="source 't'"):
+            src.read(16, 8)
+    assert src.faults_fired == 2
+    np.testing.assert_array_equal(src.read(16, 8), clean)  # purity
+    assert src.len_elements() == len(tokens)
+
+
+# ---------------------------------------------------------------------------
+# FleetCheckpoint diagnostics (satellite #2)
+# ---------------------------------------------------------------------------
+
+def test_load_state_missing_manifest_names_dir_and_snapshots(tmp_path):
+    fleet = FleetCheckpoint(str(tmp_path))
+    fleet.manager("alpha").save(0, {"x": np.zeros((2,), np.int32)})
+    fleet.manager("beta").save(0, {"x": np.zeros((2,), np.int32)})
+    assert not fleet.has_state()
+    with pytest.raises(FleetStateError) as ei:
+        fleet.load_state()
+    msg = str(ei.value)
+    assert str(tmp_path) in msg
+    assert "job-alpha" in msg and "job-beta" in msg
+    assert "manager" in msg              # points at the per-job escape
+
+
+def test_load_state_corrupt_manifest_is_diagnosed(tmp_path):
+    fleet = FleetCheckpoint(str(tmp_path))
+    fleet.save_state({"jobs": []})
+    assert fleet.has_state()
+    with open(os.path.join(str(tmp_path), FleetCheckpoint.STATE),
+              "w") as f:
+        f.write("{torn")
+    with pytest.raises(FleetStateError, match="unreadable"):
+        fleet.load_state()
+
+
+def test_save_state_fsyncs_before_rename(tmp_path, monkeypatch):
+    synced = []
+    real = os.fsync
+    monkeypatch.setattr(os, "fsync", lambda fd: synced.append(fd)
+                        or real(fd))
+    fleet = FleetCheckpoint(str(tmp_path))
+    fleet.save_state({"jobs": [1]})
+    assert synced, "save_state must fsync before the atomic rename"
+    assert fleet.load_state() == {"jobs": [1]}
+
+
+# ---------------------------------------------------------------------------
+# elastic_restore, single device (same-P path + guards + checksum gate)
+# ---------------------------------------------------------------------------
+
+def test_elastic_restore_same_p_delegates_to_seek(tokens, tmp_path):
+    solo = submit(wc_cfg(), tokens).result()
+    mgr = CheckpointManager(str(tmp_path))
+    h = submit(wc_cfg(), tokens)
+    h.step(2)
+    h.checkpoint(mgr).result()
+    h.close()
+    h2 = elastic_restore(submit(wc_cfg(), tokens), mgr)
+    assert h2.result().records == solo.records
+
+
+def test_elastic_restore_rejects_backend_mismatch(tokens, tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    h = submit(wc_cfg(), tokens)
+    h.step(1)
+    h.checkpoint(mgr).result()
+    h.close()
+    h2 = submit(wc_cfg(backend="2s"), tokens)
+    with pytest.raises(ValueError, match="backend '1s'"):
+        elastic_restore(h2, mgr)
+    h2.close()
+
+
+def test_remesh_checksum_gate_refuses_corrupt_fold(tokens, tmp_path,
+                                                   monkeypatch):
+    # force the host twin to disagree: the device fold must be rejected,
+    # not silently resumed from
+    import repro.fleet.remesh as remesh_mod
+    mgr = CheckpointManager(str(tmp_path))
+    h = submit(wc_cfg(), tokens)
+    h.step(1)
+    h.checkpoint(mgr).result()
+    h.close()
+    # same-P delegates (no fold), so fake a cross-P restore by lying
+    # about the handle's P via a 1 -> 1 fold: patch P detection instead
+    monkeypatch.setattr(remesh_mod, "fold_windows",
+                        lambda t, n: np.asarray(t) + 1)
+    monkeypatch.setattr(
+        CheckpointManager, "restore",
+        _shrinkless_restore(CheckpointManager.restore), raising=True)
+    h2 = submit(wc_cfg(), tokens)
+    with pytest.raises(RemeshChecksumError, match="refusing"):
+        elastic_restore(h2, mgr)
+    h2.close()
+
+
+def _shrinkless_restore(real):
+    """Wrap CheckpointManager.restore to report P_old = P_new + 1 by
+    padding a zero rank row — drives elastic_restore down the cross-P
+    fold path on a single device (the zero row changes no sums)."""
+    from repro.core.kv import KEY_SENTINEL
+
+    def patched(self, tree_like, step=None, shardings=None):
+        step, tree, extra = real(self, tree_like, step=step,
+                                 shardings=shardings)
+        pad = {
+            "table": lambda a: np.concatenate(
+                [a, np.zeros_like(a[:1])], axis=0),
+            "pending_k": lambda a: np.concatenate(
+                [a, np.full_like(a[:1], int(KEY_SENTINEL))], axis=0),
+            "pending_v": lambda a: np.concatenate(
+                [a, np.zeros_like(a[:1])], axis=0),
+            "owner_map": lambda a: np.concatenate(
+                [a, a[:1]], axis=0),
+            "owner_split": lambda a: np.concatenate(
+                [a, a[:1]], axis=0),
+        }
+        tree = tree._replace(**{k: f(np.asarray(getattr(tree, k)))
+                                for k, f in pad.items()})
+        return step, tree, extra
+    return patched
+
+
+# ---------------------------------------------------------------------------
+# supervisor at P=1: heal + terminal failure isolation
+# ---------------------------------------------------------------------------
+
+def test_supervisor_heals_injected_feed_fault(tokens, tmp_path):
+    solo = submit(wc_cfg(), tokens).result()
+    plan = FaultPlan((FaultEvent(0, "feed_error", job="wc",
+                                 duration=1),))
+    with FleetSupervisor(n_procs=1, ckpt_dir=str(tmp_path), plan=plan,
+                         ckpt_every=2, slices_per_tick=2) as sup:
+        sup.submit(wc_cfg(), tokens, name="wc")
+        res = sup.run(max_ticks=100)
+    assert not sup.failed
+    assert res["wc"].records == solo.records
+    kinds = [t["kind"] for t in sup.timeline]
+    assert "feed_error" in kinds and "healed" in kinds
+    assert sup.entries["wc"].source.faults_fired == 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Boom:
+    """Raises at trace time — a genuinely broken tenant (must NOT heal)."""
+    vocab: int
+
+    @property
+    def window(self):
+        return self.vocab
+
+    def map_emit(self, toks, task_id):
+        raise ValueError("boom at trace time")
+
+
+def test_supervisor_isolates_real_failures(tokens, tmp_path):
+    with FleetSupervisor(n_procs=1, ckpt_dir=str(tmp_path),
+                         ckpt_every=0, slices_per_tick=2) as sup:
+        sup.submit(wc_cfg(), tokens, name="good")
+        sup.submit(wc_cfg(usecase=Boom(vocab=VOCAB)), tokens, name="bad")
+        res = sup.run(max_ticks=100)
+    assert "good" in res                       # sibling unharmed
+    assert "bad" in sup.failed                 # terminal, not retried
+    assert "boom" in str(sup.failed["bad"])
+    assert sup.done
+
+
+def test_supervisor_restart_discipline_skips_snapshots(tokens, tmp_path):
+    """restore_on_remesh=False is fig13's control arm: checkpoints are
+    still taken, but a re-mesh restarts every job from scratch — and
+    from-scratch on the new mesh is still exact (ownership transfer)."""
+    solo = submit(wc_cfg(), tokens).result()
+    plan = FaultPlan((FaultEvent(2, "kill", ranks=(0,)),))
+    with FleetSupervisor(n_procs=1, ckpt_dir=str(tmp_path), plan=plan,
+                         ckpt_every=1, slices_per_tick=1,
+                         restore_on_remesh=False) as sup:
+        sup.submit(wc_cfg(), tokens, name="wc")
+        res = sup.run(max_ticks=200)
+    assert not sup.failed
+    assert res["wc"].records == solo.records
+    [rec] = sup.recoveries
+    assert (rec.jobs_restored, rec.jobs_scratch) == (0, 1)
+
+
+def test_supervisor_rejects_duplicate_names(tokens, tmp_path):
+    with FleetSupervisor(n_procs=1, ckpt_dir=str(tmp_path)) as sup:
+        sup.submit(wc_cfg(), tokens, name="x")
+        with pytest.raises(ValueError, match="duplicate"):
+            sup.submit(wc_cfg(), tokens, name="x")
+
+
+# ---------------------------------------------------------------------------
+# 8-device subprocess integration (slow)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_fleet_of_four_survives_kill_to_p6(devices8):
+    out = devices8("""
+        import numpy as np, tempfile
+        from repro.core.job import JobConfig, submit
+        from repro.core.usecases import WordCount, Histogram
+        from repro.fleet import FaultEvent, FaultPlan, FleetSupervisor
+
+        rng = np.random.default_rng(1)
+        data = {f"j{i}": rng.integers(0, 128, size=4096 + 1024 * i)
+                .astype(np.int32) for i in range(4)}
+        cases = {"j0": WordCount(vocab=128), "j1": WordCount(vocab=128),
+                 "j2": Histogram(vocab=128, n_bins=32),
+                 "j3": WordCount(vocab=128)}
+        def cfg(uc):
+            return JobConfig(usecase=uc, backend="1s", task_size=16,
+                             push_cap=128, segment=2, n_procs=8)
+        solo = {n: submit(cfg(cases[n]), data[n]).result()
+                for n in data}
+        plan = FaultPlan((FaultEvent(3, "kill", ranks=(1, 5)),))
+        with tempfile.TemporaryDirectory() as d:
+            sup = FleetSupervisor(n_procs=8, ckpt_dir=d, plan=plan,
+                                  ckpt_every=1, slices_per_tick=4)
+            for n in data:
+                sup.submit(cfg(cases[n]), data[n], name=n)
+            res = sup.run(max_ticks=500)
+            sup.close()
+        assert not sup.failed, sup.failed
+        assert set(res) == set(data)
+        for n in data:
+            assert res[n].records == solo[n].records, n
+        [r] = sup.recoveries
+        assert (r.kind, r.p_old, r.p_new) == ("kill", 8, 6)
+        assert r.jobs_restored == 4 and r.jobs_scratch == 0
+        assert sup.n_procs == 6
+        print("OK restored", r.jobs_restored, "in", round(r.seconds, 2))
+    """)
+    assert "OK restored 4" in out
+
+
+@pytest.mark.slow
+def test_elastic_matrix_records_identical(devices8):
+    # use-case x {1s, 1s+steal} x {hash, sampled+split}, folded to both
+    # P=6 and P=4 — every combination record-identical to its solo run
+    out = devices8("""
+        import numpy as np, tempfile
+        from repro.ckpt import CheckpointManager
+        from repro.core.job import JobConfig, submit
+        from repro.core.usecases import (Histogram, InvertedIndex,
+                                         WordCount)
+        from repro.fleet import elastic_restore
+
+        rng = np.random.default_rng(5)
+        tokens = rng.integers(0, 96, size=4096).astype(np.int32)
+        cases = [("wc", WordCount(vocab=96)),
+                 ("hist", Histogram(vocab=96, n_bins=16)),
+                 ("inv", InvertedIndex(queries=(3, 5, 7), n_docs=8,
+                                       tasks_per_doc=4))]
+        checked = 0
+        for cname, uc in cases:
+            for stealing in (False, True):
+                for part in ("hash", "sampled+split"):
+                    def cfg(P):
+                        return JobConfig(
+                            usecase=uc, backend="1s", task_size=16,
+                            push_cap=128, segment=2, n_procs=P,
+                            stealing=stealing, partitioner=part)
+                    solo = submit(cfg(8), tokens).result()
+                    with tempfile.TemporaryDirectory() as d:
+                        mgr = CheckpointManager(d)
+                        h = submit(cfg(8), tokens)
+                        h.step(5)              # mid-run snapshot
+                        h.checkpoint(mgr).result()
+                        h.close()
+                        for P_new in (6, 4):
+                            h2 = elastic_restore(
+                                submit(cfg(P_new), tokens), mgr)
+                            r = h2.result()
+                            tag = (cname, stealing, part, P_new)
+                            assert r.records == solo.records, tag
+                            checked += 1
+        print("MATRIX OK", checked)
+    """)
+    assert "MATRIX OK 24" in out
