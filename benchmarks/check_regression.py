@@ -117,6 +117,40 @@ CHECKS: dict[str, dict] = {
                          "criteria.fair_jain_beats_fifo",
                          "criteria.priority_favors_high"],
     },
+    "fig12": {
+        "fresh": "fig12_roofline.json",
+        "baseline": "BENCH_roofline.json",
+        "required": ["triad_gbps", "model.rows", "real.per_vocab",
+                     "criteria.fused_model_beats_unfused_measured_at_max",
+                     "criteria.fused_bytes_win_pct_at_max",
+                     "criteria.achieved_bw_frac_fused_at_max",
+                     "criteria.records_equal",
+                     "criteria.oracle_exact"],
+        "gates": [
+            # the fused path's bytes-moved win over unfused is structural
+            # (one window pass instead of two); it may shrink vs the
+            # committed trajectory by at most 15 percentage points (the
+            # smoke grid tops out at a smaller window, where the
+            # record-domain terms weigh more)
+            ("criteria.fused_bytes_win_pct_at_max", "min", 15.0),
+        ],
+        "floors": [
+            # the fused kernel must actually move its modeled bytes at a
+            # sane fraction of the measured triad bandwidth — interpret
+            # mode included, a kernel that falls under 2% is broken (or
+            # the superlinear tiling regression came back) regardless of
+            # what the baseline says
+            ("criteria.achieved_bw_frac_fused_at_max", 0.02),
+        ],
+        "require_true": [
+            # the falsifiable headline: modeled fused step time beats the
+            # MEASURED unfused step wall at the largest window
+            "criteria.fused_model_beats_unfused_measured_at_max",
+            # exactness on real engine runs — the kernel's whole contract
+            "criteria.records_equal",
+            "criteria.oracle_exact",
+        ],
+    },
     "fig13": {
         "fresh": "fig13_elastic.json",
         "baseline": "BENCH_elastic.json",
@@ -207,10 +241,26 @@ def check(name: str, results_dir: str, baseline_dir: str) -> list[str]:
     return errors
 
 
+def group_names(group: str) -> list[str]:
+    """Expand a run.py registry group to the guarded benchmarks in it —
+    the same single list ``--smoke-all`` sweeps, so CI's guard step needs
+    no hand-maintained figure list either."""
+    try:
+        from benchmarks.run import REGISTRY
+    except ImportError:                  # invoked as a script from benchmarks/
+        from run import REGISTRY
+    return [b.name for b in REGISTRY if b.name in CHECKS
+            and (group == "all" or b.group == group)]
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("benchmarks", nargs="+", choices=sorted(CHECKS),
-                    help="which artifacts to guard")
+    ap.add_argument("benchmarks", nargs="*", choices=sorted(CHECKS) + [[]],
+                    help="which artifacts to guard (or use --group)")
+    ap.add_argument("--group", default="",
+                    choices=["", "bench", "chaos", "all"],
+                    help="guard every registered benchmark in a run.py "
+                         "group instead of naming them")
     ap.add_argument("--results", default=os.path.join(REPO, "results"),
                     help="directory holding the fresh artifacts")
     ap.add_argument("--baseline", default=REPO,
@@ -218,8 +268,12 @@ def main(argv=None) -> int:
                          "baselines (default: the repo root — smoke runs "
                          "never overwrite those)")
     args = ap.parse_args(argv)
+    names = list(args.benchmarks) + (group_names(args.group)
+                                     if args.group else [])
+    if not names:
+        ap.error("name benchmarks or pass --group")
     failures: list[str] = []
-    for name in args.benchmarks:
+    for name in names:
         errs = check(name, args.results, args.baseline)
         for e in errs:
             print(f"FAIL {e}")

@@ -1,0 +1,308 @@
+"""Fig 12 — roofline of the fused map→bucketize→combine hot path.
+
+PR 8 fused the 1S engine's per-step inner loop (local reduce, owner
+lookup, bucketize, both window folds) into one pallas kernel
+(``kernels/fused_map``) that streams the dense Key-Value window — the
+*window* IS the vocab axis here — through VMEM exactly once per step,
+where the unfused path materializes it twice (pending fold + overflow
+fold). This benchmark states that win the roofline way: bytes moved per
+step, divided by the *measured* machine bandwidth, against the
+*measured* per-step wall time.
+
+Methodology (the repo's two honest modes, common.py):
+
+  * **measured** — the unfused step composition and the fused kernel are
+    timed standalone per vocab size on one host device. On CPU the fused
+    kernel runs in pallas interpret mode, which adds executor overhead a
+    real TPU does not pay — so measured fused wall is recorded (and must
+    stay sane) but the headline is NOT an interpret-wall race;
+  * **modeled** — per-step HBM bytes for each path (two window passes vs
+    one, plus record-domain terms) over the STREAM-triad bandwidth
+    measured on this machine (``common.stream_triad_gbps``). The
+    falsifiable gate: the fused path's *modeled* step time must beat the
+    unfused path's *measured* step time at the largest window — the
+    model is only allowed to claim a win that clears real, measured
+    wall time, not another model;
+  * **real runs** — full engine jobs for {unfused, fused} x
+    {hash, sampled+split} per vocab must stay record-identical to the
+    unfused/hash baseline AND the numpy oracle (the kernel's exactness
+    contract, live-checked every CI run).
+
+Artifacts: ``results/fig12_roofline.json`` + repo-root
+``BENCH_roofline.json``.
+
+    PYTHONPATH=src python benchmarks/fig12_roofline.py [--quick|--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+try:
+    from benchmarks.common import REPO, run_py, save_json, stream_triad_gbps
+except ImportError:                      # invoked as a script from benchmarks/
+    from common import REPO, run_py, save_json, stream_triad_gbps
+
+VOCABS = [16384, 65536, 262144]          # dense window sizes swept
+TASK_SIZE = 256                          # records per map task (S)
+PUSH_CAP = 64                            # per-owner push-bucket capacity
+N_PROCS = 4
+ZIPF_A = 1.4                             # real-run key distribution
+
+STEP_CODE = """
+import functools, json, time
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.kv import bucketize, local_reduce_repeated
+from repro.core.partition import lookup_owner
+from repro.core.windows import DenseWindow
+from repro.kernels.fused_map.ops import fused_map_step
+
+P, CAP, S = {n_procs}, {push_cap}, {task_size}
+
+def timeit(fn, *args, n={timing_reps}):
+    jax.block_until_ready(fn(*args))              # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n
+
+rng = np.random.default_rng(0)
+out = {{}}
+for V in {vocabs}:
+    keys = jnp.asarray(rng.integers(0, V, S), jnp.int32)
+    vals = jnp.ones((S,), jnp.int32)
+    omap = jnp.asarray(np.arange(V) % P, jnp.int32)
+    osplit = jnp.ones((V,), jnp.int32)
+    pk = jnp.asarray(rng.integers(0, V, (P, CAP)), jnp.int32)
+    pv = jnp.ones((P, CAP), jnp.int32)
+    tbl = jnp.zeros((V,), jnp.int32)
+
+    # the exact phase II+III body of onesided._step, minus the a2a (the
+    # push is identical in both paths, so it cancels out of the race)
+    @jax.jit
+    def unfused(keys, vals, omap, osplit, pk, pv, tbl):
+        uk, uv = local_reduce_repeated(keys, vals, keys.shape[0],
+                                       jnp.int32(1))
+        owners = lookup_owner(omap, osplit, uk, jnp.int32(0), P)
+        bk, bv, counts, (ofk, ofv) = bucketize(uk, uv, P, CAP,
+                                               owners=owners)
+        win = DenseWindow(tbl).put(pk.reshape(-1),
+                                   pv.reshape(-1)).put(ofk, ofv)
+        return win.table, bk, bv, counts
+
+    fused = functools.partial(fused_map_step, n_procs=P, cap=CAP)
+    t_un = timeit(unfused, keys, vals, omap, osplit, pk, pv, tbl)
+    t_fu = timeit(fused, keys, vals, jnp.int32(1), jnp.int32(0),
+                  omap, osplit, pk, pv, tbl)
+    out[str(V)] = dict(unfused_step_s=t_un, fused_step_s=t_fu)
+print(json.dumps(out))
+"""
+
+REAL_CODE = """
+import json
+from repro.core import JobConfig, submit
+from repro.core.usecases import WordCount, wordcount_oracle
+from repro.data.source import ZipfSource, read_all
+
+P, N, TASK, CAP = {n_procs}, {n_tokens}, {task_size}, {push_cap}
+PARTS = ["hash", "sampled+split"]
+out = {{}}
+for V in {vocabs}:
+    src = ZipfSource(N, vocab=V, a={zipf_a}, seed=2)
+    oracle = wordcount_oracle(read_all(src), V)
+    row = {{}}
+    base = None
+    for fused in (False, True):
+        for part in PARTS:
+            cfg = JobConfig(usecase=WordCount(vocab=V), backend="1s",
+                            task_size=TASK, push_cap=CAP, n_procs=P,
+                            fused_map=fused, partitioner=part)
+            submit(cfg, src).result()             # compile + warm
+            walls = []
+            for _ in range({reps_n}):
+                res = submit(cfg, src).result()
+                walls.append(res.wall_time)
+            if base is None:
+                base = res.records
+            # recorded, not asserted: the artifact carries the live
+            # outcome so bench-guard's records_equal gate is a real check
+            tag = ("fused" if fused else "unfused") + "|" + part
+            row[tag] = dict(wall_s=min(walls),
+                            records_equal=bool(res.records == base),
+                            oracle_equal=bool(res.records == oracle))
+    out[str(V)] = row
+print(json.dumps(out))
+"""
+
+
+def bytes_moved(V: int, S: int, P: int, cap: int) -> tuple[float, float]:
+    """Per-step HBM bytes for the unfused and fused hot paths.
+
+    Every table entry is int32 (4 bytes); a full window pass reads and
+    writes each entry once (8 bytes/entry). The unfused path makes TWO
+    passes per step — XLA materializes a fresh (V,) table per fold, once
+    for the pending chunk and once for the overflow records — while the
+    fused kernel makes ONE (both folds land in the same VMEM-resident
+    tile). Record-domain terms: the unfused path runs three sort-based
+    passes over the (S,) records (local_reduce's argsort + bucketize's
+    two), each touching ~S*8 bytes per comparator level; the fused path
+    keeps the record pass in VMEM and pays the two owner-map gathers at
+    a cacheline per probe, plus the record/bucket streams themselves.
+    """
+    lg = max(int(np.ceil(np.log2(max(S, 2)))), 1)
+    table_pass = 8.0 * V                  # read + write, 4B entries
+    rec_stream = 8.0 * S                  # one (keys, vals) record stream
+    unfused = (2 * table_pass             # pending fold + overflow fold
+               + 3 * rec_stream * lg      # local_reduce + 2 bucketize sorts
+               + 4 * rec_stream)          # map out / reduce in / buckets
+    fused = (table_pass                   # the single window pass
+             + 2 * 64.0 * S               # owner_map/owner_split gathers
+             + 2 * rec_stream             # records in, buckets out
+             + 8.0 * P * cap)             # pending chunk read
+    return unfused, fused
+
+
+def measure_steps(vocabs, task_size: int, n_procs: int, push_cap: int,
+                  timing_reps: int) -> dict:
+    out = run_py(STEP_CODE.format(n_procs=n_procs, push_cap=push_cap,
+                                  task_size=task_size, vocabs=list(vocabs),
+                                  timing_reps=timing_reps),
+                 n_devices=1)
+    return json.loads(out.strip().splitlines()[-1])
+
+
+def measure_real(vocabs, n_procs: int, n_tokens: int, task_size: int,
+                 push_cap: int, reps_n: int) -> dict:
+    out = run_py(REAL_CODE.format(n_procs=n_procs, n_tokens=n_tokens,
+                                  task_size=task_size, push_cap=push_cap,
+                                  vocabs=list(vocabs), zipf_a=ZIPF_A,
+                                  reps_n=reps_n),
+                 n_devices=n_procs)
+    return json.loads(out.strip().splitlines()[-1])
+
+
+def run(quick: bool = False, smoke: bool = False) -> dict:
+    if smoke:
+        vocabs = [65536]
+        timing_reps, real_p, real_n, reps_n = 3, 2, 4096, 1
+    elif quick:
+        vocabs = VOCABS[:2]
+        timing_reps, real_p, real_n, reps_n = 5, 4, 16384, 2
+    else:
+        vocabs = VOCABS
+        timing_reps, real_p, real_n, reps_n = 10, N_PROCS, 32768, 3
+
+    bw = stream_triad_gbps()
+    print(f"[fig12] STREAM triad bandwidth: {bw:.1f} GB/s")
+
+    print("[fig12] measuring per-step walls (1 device)...")
+    steps = measure_steps(vocabs, TASK_SIZE, N_PROCS, PUSH_CAP,
+                          timing_reps)
+    rows = []
+    for V in vocabs:
+        m = steps[str(V)]
+        b_un, b_fu = bytes_moved(V, TASK_SIZE, N_PROCS, PUSH_CAP)
+        row = dict(
+            vocab=V,
+            unfused_step_s=m["unfused_step_s"],
+            fused_step_s=m["fused_step_s"],
+            bytes_unfused=b_un, bytes_fused=b_fu,
+            model_unfused_s=b_un / (bw * 1e9),
+            model_fused_s=b_fu / (bw * 1e9),
+            # achieved fraction of the triad roofline: modeled bytes over
+            # measured wall, normalized by measured bandwidth
+            achieved_bw_frac_unfused=b_un / m["unfused_step_s"] / (bw * 1e9),
+            achieved_bw_frac_fused=b_fu / m["fused_step_s"] / (bw * 1e9),
+            measured_ratio_fused_vs_unfused=(m["fused_step_s"]
+                                             / m["unfused_step_s"]),
+        )
+        rows.append(row)
+        print(f"[fig12] V={V:<7} unfused={row['unfused_step_s']*1e3:.3f}ms "
+              f"fused={row['fused_step_s']*1e3:.3f}ms "
+              f"(model {row['model_unfused_s']*1e3:.3f} / "
+              f"{row['model_fused_s']*1e3:.3f}ms, fused achieves "
+              f"{100*row['achieved_bw_frac_fused']:.1f}% of triad bw)")
+
+    print(f"[fig12] real runs (P={real_p}, N={real_n})...")
+    real = measure_real(vocabs, real_p, real_n, TASK_SIZE, PUSH_CAP,
+                        reps_n)
+    rec_eq = all(b["records_equal"] for v in real.values()
+                 for b in v.values())
+    ora_eq = all(b["oracle_equal"] for v in real.values()
+                 for b in v.values())
+
+    top = rows[-1]
+    rec = {
+        "vocabs": list(vocabs), "task_size": TASK_SIZE,
+        "push_cap": PUSH_CAP, "n_procs": N_PROCS,
+        "triad_gbps": bw,
+        "model": {"rows": rows},
+        "real": {"P": real_p, "n_tokens": real_n, "per_vocab": real},
+        # interpret-mode honesty: the measured fused wall includes the
+        # pallas interpreter's executor overhead (absent on a real TPU),
+        # so the measured ratio is recorded as a sanity bound, never as
+        # the headline win — that is the model's job (common.py mode 2)
+        "measured_ratio_note": "fused_step_s runs in pallas interpret "
+                               "mode on CPU; the headline gate is "
+                               "model_fused_s vs unfused_step_s",
+        "criteria": {
+            # the falsifiable headline: the fused path's modeled step
+            # time (bytes over *measured* triad bandwidth) must clear the
+            # unfused path's *measured* wall at the largest window
+            "fused_model_beats_unfused_measured_at_max": bool(
+                top["model_fused_s"] < top["unfused_step_s"]),
+            # the structural win the kernel exists for: one window pass
+            # instead of two -> just under half the bytes at large V
+            "fused_bytes_win_pct_at_max": 100.0 * (
+                1 - top["bytes_fused"] / top["bytes_unfused"]),
+            # the fused kernel must actually move its modeled bytes at a
+            # sane fraction of the machine's bandwidth, interpret
+            # overhead included (absolute floor in bench-guard)
+            "achieved_bw_frac_fused_at_max": top["achieved_bw_frac_fused"],
+            "measured_ratio_fused_vs_unfused_at_max": top[
+                "measured_ratio_fused_vs_unfused"],
+            # exactness, live-checked on real engine runs: every
+            # {unfused, fused} x {hash, sampled+split} config identical
+            # to the unfused/hash baseline and to the numpy oracle
+            "records_equal": rec_eq,
+            "oracle_exact": ora_eq,
+        },
+    }
+    path = save_json("fig12_roofline.json", rec)
+    wrote = [path]
+    if not smoke:
+        # only full/quick runs refresh the committed trajectory baseline
+        # — CI-scale smoke runs must never clobber it (fig9/fig10 rule)
+        root = os.path.join(REPO, "BENCH_roofline.json")
+        with open(root, "w") as f:
+            json.dump(rec, f, indent=1)
+        wrote.append(root)
+    c = rec["criteria"]
+    print(f"[fig12] at V={top['vocab']}: fused moves "
+          f"{c['fused_bytes_win_pct_at_max']:.1f}% fewer bytes "
+          f"(model {top['model_fused_s']*1e3:.3f}ms vs measured unfused "
+          f"{top['unfused_step_s']*1e3:.3f}ms), records_equal={rec_eq}")
+    print("wrote " + " and ".join(wrote))
+    if not (rec_eq and ora_eq):
+        raise RuntimeError("fused path diverged from the unfused engine "
+                           "— see real.per_vocab records_equal/"
+                           "oracle_equal flags")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="two window sizes / fewer repetitions")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: tiny run, still writes results/*.json")
+    args = ap.parse_args()
+    run(quick=args.quick, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -58,13 +58,20 @@ def shipping_programs(mesh: Mesh | None = None,
     for bname in available_backends():
         backend = get_backend(bname)
         for cname, usecase in SHIPPING_CASES:
-            variants = [(False, "")]
+            variants = [(False, False, "")]
             if getattr(backend, "supports_stealing", False):
-                variants.append((True, "+steal"))
-            for stealing, suffix in variants:
+                variants.append((True, False, "+steal"))
+            if getattr(backend, "supports_fused_map", False):
+                # the fused hot path is a different compiled program
+                # (a pallas kernel inside the engine scan) — it must
+                # pass the same SPMD/replication gate as the unfused one
+                variants.append((False, True, "+fused"))
+                variants.append((True, True, "+steal+fused"))
+            for stealing, fused, suffix in variants:
                 spec = JobSpec(vocab=usecase.window, task_size=8,
                                push_cap=16, n_procs=n_procs,
-                               segment=seg_tasks, stealing=stealing)
+                               segment=seg_tasks, stealing=stealing,
+                               fused_map=fused)
                 handles.extend(backend.trace_handles(
                     spec, as_map_fn(usecase), mesh, seg_tasks=seg_tasks,
                     tag=f"{bname}/{cname}{suffix}"))
@@ -79,15 +86,35 @@ def shipping_programs(mesh: Mesh | None = None,
 def shipping_kernels() -> list[KernelCheck]:
     """Every kernel in ``kernels/`` as a KernelCheck with representative
     shipped shapes and declared worst-case counts."""
+    from repro.core.kv import KEY_SENTINEL
     from repro.kernels.flash_attention import ops as fa
     from repro.kernels.flash_decode import ops as fd
+    from repro.kernels.fused_map import ops as fm
     from repro.kernels.moe_dispatch import ops as moe
     from repro.kernels.ssd_scan import ops as ssd
     from repro.kernels.wordcount_hash import ops as wc
 
     N, T = 4096, 1024
+    S, V, Pn, C = 64, 512, 8, 16         # fused step: shipped engine scale
     f32, i32 = jnp.float32, jnp.int32
     return [
+        KernelCheck(
+            "fused_map",
+            build=lambda: (fm.fused_map_step,
+                           (jnp.zeros((S,), i32), jnp.zeros((S,), i32),
+                            jnp.int32(1), jnp.int32(0),
+                            jnp.zeros((V,), i32), jnp.ones((V,), i32),
+                            jnp.full((Pn, C), KEY_SENTINEL, i32),
+                            jnp.zeros((Pn, C), i32),
+                            jnp.zeros((V,), i32)),
+                           dict(n_procs=Pn, cap=C, block_voc=128,
+                                interpret=True)),
+            # int32 outputs hold per-key window totals; the engine's
+            # record bound under the PR 6 saturating-combine contract
+            # keeps every legitimate total well inside 2^30
+            worst_count=2 ** 30,
+            ops_module="repro.kernels.fused_map.ops",
+            kernel_fn="repro.kernels.fused_map.kernel:fused_map_pallas"),
         KernelCheck(
             "wordcount_hash",
             build=lambda: (wc.wordcount_hist, (jnp.zeros((N,), i32),),
@@ -269,6 +296,33 @@ def _pal001(fires: bool) -> KernelCheck:
         worst_count=None)
 
 
+def _pal001_fused(fires: bool) -> KernelCheck:
+    # the fused_map failure mode: a sequential grid streams (vocab,)
+    # table tiles while record-domain operands ride along as full
+    # blocks; the bad twin's tile index map is off by one, so the last
+    # grid step reads a tile past the padded table
+    tile_map = (lambda j: (j + 1,)) if fires else (lambda j: (j,))
+
+    def kernel(t_ref, r_ref, o_ref):
+        o_ref[...] = t_ref[...] + r_ref[0]
+
+    def fn(table, recs):
+        return pl.pallas_call(
+            kernel,
+            out_shape=jax.ShapeDtypeStruct((512,), jnp.int32),
+            grid=(8,),
+            in_specs=[pl.BlockSpec((64,), tile_map),
+                      pl.BlockSpec((16,), lambda j: (0,))],
+            out_specs=pl.BlockSpec((64,), lambda j: (j,)),
+            interpret=True)(table, recs)
+
+    return KernelCheck(
+        f"mutant/pal001-fused/{'bad' if fires else 'near'}",
+        build=lambda: (fn, (jnp.zeros((512,), jnp.int32),
+                            jnp.zeros((16,), jnp.int32)), {}),
+        worst_count=10 ** 6)
+
+
 def _pal002(fires: bool) -> KernelCheck:
     def fn(x):
         return pl.pallas_call(
@@ -328,6 +382,10 @@ MUTANTS = (
            lambda: _pal001(True)),
     Mutant("pal001-near", "PAL001", False, "kernel",
            lambda: _pal001(False)),
+    Mutant("pal001-fused-bad", "PAL001", True, "kernel",
+           lambda: _pal001_fused(True)),
+    Mutant("pal001-fused-near", "PAL001", False, "kernel",
+           lambda: _pal001_fused(False)),
     Mutant("pal002-bad", "PAL002", True, "kernel",
            lambda: _pal002(True)),
     Mutant("pal002-near", "PAL002", False, "kernel",

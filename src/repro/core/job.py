@@ -74,6 +74,11 @@ class JobConfig:
                               #   map from a planner pre-pass),
                               #   "sampled+split" (hot keys spread over
                               #   several owners), or any Partitioner
+    fused_map: bool = False   # per-step hot path as one pallas kernel
+                              #   (kernels/fused_map) — bit-identical to
+                              #   the default unfused path; see the
+                              #   README "Fused hot path" section for
+                              #   when it wins
 
 
 @dataclass(frozen=True)
@@ -150,12 +155,19 @@ def submit(config: JobConfig, dataset, *, mesh=None, repeats=None,
             f"backend {config.backend!r} does not implement device-side "
             "work stealing (no supports_stealing attribute) — drop "
             "stealing=True or use backend '1s'")
+    if config.fused_map and not getattr(backend, "supports_fused_map",
+                                        False):
+        raise ValueError(
+            f"backend {config.backend!r} does not implement the fused "
+            "map hot path (no supports_fused_map attribute) — drop "
+            "fused_map=True or use backend '1s'")
     partitioner = resolve_partitioner(config.partitioner)  # fail fast too
     window = config.window or config.usecase.window
     spec = JobSpec(vocab=window, task_size=config.task_size,
                    push_cap=config.push_cap, n_procs=config.n_procs,
                    combine_capacity=config.combine_capacity,
                    segment=config.segment, stealing=config.stealing,
+                   fused_map=config.fused_map,
                    partitioner=partitioner.name)
     from repro.distributed.mesh import local_mesh
     if mesh is None:
@@ -383,6 +395,10 @@ class JobHandle:
                    "cursor": self.cursor,
                    "backend": self.backend.name,
                    "stealing": self.config.stealing,
+                   # recorded for provenance only: the fused and unfused
+                   # hot paths are bit-identical and share carry shapes,
+                   # so snapshots interchange freely across the flag
+                   "fused_map": self.spec.fused_map,
                    "partitioner": self.spec.partitioner,
                    "task_ids": self.feed.task_ids_grid.tolist(),
                    "repeats": self.feed.repeats_grid.tolist()})

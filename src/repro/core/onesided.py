@@ -39,6 +39,7 @@ from repro.core.windows import (AXIS, DenseWindow, EngineCarry,
                                 STATUS_REDUCE, combine_records, init_carry,
                                 wrap_segment_fns)
 from repro.distributed.collectives import all_to_all_blocks, shard_map
+from repro.kernels.fused_map.ops import fused_map_step
 
 
 def _step(spec: JobSpec, map_fn: Callable, carry: EngineCarry, xs):
@@ -46,6 +47,18 @@ def _step(spec: JobSpec, map_fn: Callable, carry: EngineCarry, xs):
     P, cap = spec.n_procs, spec.push_cap
     # Phase I: Map (+ simulated imbalance via data-dependent repeat loop)
     keys, vals = map_fn(task, task_id, rep)
+    if spec.fused_map:
+        # Phases II+III fused into one pallas kernel (kernels/fused_map):
+        # local reduce, owner lookup, bucketize and both window folds in
+        # a single vocab pass — bit-identical to the unfused path below.
+        table, bk, bv, counts = fused_map_step(
+            keys, vals, rep, task_id, carry.owner_map, carry.owner_split,
+            carry.pending_k, carry.pending_v, carry.table,
+            n_procs=P, cap=cap)
+        rk = all_to_all_blocks(bk, AXIS)
+        rv = all_to_all_blocks(bv, AXIS)
+        return carry._replace(table=table, pending_k=rk, pending_v=rv,
+                              cursor=carry.cursor + 1), counts
     # Phase II: Local Reduce (inside Map, as in the paper). The repeat
     # factor re-computes the whole task (paper footnote 5) — per-rank
     # while-trip-counts differ, which is exactly the imbalance mechanism.
@@ -167,6 +180,9 @@ class OneSidedBackend:
     # the engine honors JobSpec.stealing (device-side work stealing,
     # core/steal.py); submit() refuses the flag on backends without this
     supports_stealing = True
+    # ... and JobSpec.fused_map (the pallas-fused per-step hot path,
+    # kernels/fused_map), gated by submit() the same way
+    supports_fused_map = True
 
     def __init__(self):
         self._programs: dict = {}

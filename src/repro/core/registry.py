@@ -46,6 +46,14 @@ class JobSpec:
     stealing: bool = False       # device-side work stealing (core/steal.py);
                                  #   only engines advertising
                                  #   ``supports_stealing`` honor it
+    fused_map: bool = False      # run the per-step hot path as one pallas
+                                 #   kernel (kernels/fused_map) instead of
+                                 #   plain XLA ops; bit-identical results,
+                                 #   only engines advertising
+                                 #   ``supports_fused_map`` honor it. A
+                                 #   comparing field: it selects a different
+                                 #   compiled program, unlike the
+                                 #   carry-data ``partitioner`` tag.
     # reduce-side key→owner strategy name (core/partition.py). The owner
     # map itself is CARRY DATA, so the compiled program is identical for
     # every partitioner — compare=False keeps this provenance tag out of

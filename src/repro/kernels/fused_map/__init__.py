@@ -1,0 +1,3 @@
+from repro.kernels.fused_map.ops import fused_map_step
+
+__all__ = ["fused_map_step"]

@@ -1,0 +1,26 @@
+"""Jitted entry point for the fused 1S step kernel.
+
+Shares the repo-wide interpret policy (kernels/backend.py): interpret on
+CPU CI, compiled on a real TPU, overridable per call.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.backend import default_interpret
+from repro.kernels.fused_map.kernel import fused_map_pallas
+
+
+@partial(jax.jit,
+         static_argnames=("n_procs", "cap", "block_voc", "interpret"))
+def fused_map_step(keys, vals, rep, task_id, owner_map, owner_split,
+                   pending_k, pending_v, table, *, n_procs: int, cap: int,
+                   block_voc: int = 0, interpret: bool | None = None):
+    """One fused engine step (see kernel.py). Returns
+    ``(table, bk, bv, counts)`` bit-identical to ref.fused_step_ref."""
+    return fused_map_pallas(keys, vals, rep, task_id, owner_map,
+                            owner_split, pending_k, pending_v, table,
+                            n_procs=n_procs, cap=cap, block_voc=block_voc,
+                            interpret=default_interpret(interpret))

@@ -1,0 +1,55 @@
+"""Pure-jnp oracle for the fused 1S step kernel.
+
+This is literally the unfused hot path of :func:`repro.core.onesided._step`
+between ``map_fn`` and the all_to_all push, re-packaged as one function:
+local reduce (with the footnote-5 repeat loop) -> owner lookup against the
+carried partition maps -> bucketize into per-owner push buckets -> fold the
+previous step's in-flight chunk plus this step's overflow (ownership
+transfer) into the dense window. The kernel must match it **bit-exactly**
+on every output — all arithmetic is int32, so summation order is free
+(associative mod 2^32) and the contract is testable with
+``assert_array_equal`` rather than tolerances.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.kv import bucketize, local_reduce_repeated
+from repro.core.partition import lookup_owner
+from repro.core.windows import DenseWindow
+
+
+def fused_step_ref(keys, vals, rep, task_id, owner_map, owner_split,
+                   pending_k, pending_v, table, *, n_procs: int, cap: int):
+    """Reference for one fused engine step.
+
+    Args mirror the engine carry slices: ``keys``/``vals`` are the task's
+    mapped records (S,), ``rep`` the compute-repeat scalar, ``task_id``
+    the global task id scalar, ``owner_map``/``owner_split`` the carried
+    (vocab,) partition maps, ``pending_k``/``pending_v`` the previous
+    step's in-flight (P, cap) chunk, ``table`` the (vocab,) dense window.
+
+    Returns ``(table, bk, bv, counts)``: the folded window, the (P, cap)
+    push buckets, and the per-owner fill counts.
+    """
+    uk, uv = local_reduce_repeated(keys, vals, keys.shape[0], rep)
+    owners = lookup_owner(owner_map, owner_split, uk, task_id, n_procs)
+    bk, bv, counts, (ofk, ofv) = bucketize(uk, uv, n_procs, cap,
+                                           owners=owners)
+    win = DenseWindow(table).put(pending_k.reshape(-1),
+                                 pending_v.reshape(-1))
+    win = win.put(ofk, ofv)
+    return win.table, bk, bv, counts
+
+
+def records_dense(keys, vals, vocab: int):
+    """Dense (vocab,) total of a record array — conservation-check helper
+    for the kernel tests (every input record must land in exactly one of:
+    the window delta, a push bucket, or the overflow fold)."""
+    from repro.core.kv import KEY_SENTINEL
+    keys = keys.reshape(-1)
+    vals = vals.reshape(-1)
+    valid = (keys != KEY_SENTINEL) & (keys >= 0) & (keys < vocab)
+    idx = jnp.where(valid, keys, 0)
+    return jnp.zeros((vocab,), jnp.int32).at[idx].add(
+        jnp.where(valid, vals, 0))
