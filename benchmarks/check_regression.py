@@ -185,6 +185,45 @@ CHECKS: dict[str, dict] = {
             "criteria.recovery_beats_restart",
         ],
     },
+    "fig14": {
+        "fresh": "fig14_crossjob.json",
+        "baseline": "BENCH_crossjob.json",
+        "required": ["model", "real.per_k", "criteria.max_K",
+                     "criteria.cosched_makespan_win_pct",
+                     "criteria.cosched_p95_win_pct",
+                     "criteria.jain_fair", "criteria.jain_cosched",
+                     "criteria.crossjob_steals_real",
+                     "criteria.all_jobs_exact"],
+        "gates": [
+            # the co-scheduled fleet's modeled makespan win over fig11's
+            # fair slicer is structural (K hot tails balanced in one
+            # domain vs paid serially); it may shrink vs the committed
+            # trajectory by at most 30 percentage points (the smoke
+            # model runs at P=8 instead of P=64, where per-rank tails
+            # average out more)
+            ("criteria.cosched_makespan_win_pct", "min", 30.0),
+        ],
+        "floors": [
+            # absolute fairness floor, as in fig11: the co-scheduled
+            # fleet's Jain index over solo/latency must clear 0.30 —
+            # a domain that starves its small members behind the giant
+            # job's tail is broken regardless of the baseline
+            ("criteria.jain_cosched", 0.30),
+        ],
+        "require_true": [
+            # the headline: at the highest K the merged domain beats
+            # the fair slicer on BOTH makespan and latency fairness
+            "criteria.cosched_beats_fair_makespan",
+            "criteria.cosched_beats_fair_jain",
+            # exactness: every co-scheduled job reproduced its solo
+            # records bit-for-bit, at every K, in both fleets
+            "criteria.all_jobs_exact",
+            # and the mechanism actually ran — real cross-rank steals
+            # inside the merged domain, one domain per fleet
+            "criteria.crossjob_stealing_active",
+            "criteria.one_domain_per_fleet",
+        ],
+    },
 }
 
 

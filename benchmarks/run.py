@@ -53,6 +53,8 @@ REGISTRY: tuple[Bench, ...] = (
           smoke=True),
     Bench("fig13", "benchmarks.fig13_elastic", "fig13_elastic.json",
           smoke=True, group="chaos"),
+    Bench("fig14", "benchmarks.fig14_crossjob", "fig14_crossjob.json",
+          smoke=True),
     Bench("moe", "benchmarks.moe_dispatch_bench", "moe_dispatch.json"),
     Bench("roofline", "benchmarks.roofline", "roofline.json"),
 )

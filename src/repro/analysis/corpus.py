@@ -75,6 +75,22 @@ def shipping_programs(mesh: Mesh | None = None,
                 handles.extend(backend.trace_handles(
                     spec, as_map_fn(usecase), mesh, seg_tasks=seg_tasks,
                     tag=f"{bname}/{cname}{suffix}"))
+            if getattr(backend, "supports_coschedule", False):
+                # the co-scheduled engine: a 2-member WorkDomain's
+                # composite program — key-window offsetting plus the
+                # psum-maintained ``carry.job_work`` row — ships
+                # through the same SPMD/replication gate
+                for stealing, suffix in ((False, "+cosched"),
+                                         (True, "+steal+cosched")):
+                    spec = JobSpec(vocab=usecase.window * 2,
+                                   task_size=8, push_cap=16,
+                                   n_procs=n_procs, segment=seg_tasks,
+                                   stealing=stealing, coslots=2,
+                                   costride=seg_tasks)
+                    handles.extend(backend.trace_handles(
+                        spec, as_map_fn(usecase), mesh,
+                        seg_tasks=seg_tasks,
+                        tag=f"{bname}/{cname}{suffix}"))
     # the elastic re-mesh fold ships through the same gate as the
     # engines: its replicated-out contract (folded owner map/split +
     # psum checksum) is exactly what REP001 exists to check
@@ -274,6 +290,33 @@ def _rep001_fold(fires: bool) -> ProgramHandle:
                       replicated_out=("total",))
 
 
+def _rep001_crossjob(fires: bool) -> ProgramHandle:
+    # the cross-job cursor failure mode: ``carry.job_work`` (executed
+    # work per member slot) is asserted replicated — each rank
+    # scatter-adds the repeats it executed into a local slot row, and
+    # only a psum turns those partials into the fleet row. The bad twin
+    # feeds the row around the ring instead: ppermute is a shuffle, not
+    # a replication (every rank ends holding a *different* partial), so
+    # the taint rules keep it rank-varying and REP001 fires.
+    mesh = procs_mesh(1)
+    n = int(mesh.devices.size)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+
+    def _slot_row(x):
+        slot = x[0, 0] % 2          # member slot of the claimed task
+        return jnp.zeros((1, 2), jnp.int32).at[0, slot].add(x.sum())
+
+    def bad(x):
+        return lax.ppermute(_slot_row(x), "procs", perm)[0, :1]
+
+    def near(x):
+        return lax.psum(_slot_row(x), "procs")[0, :1]
+
+    return _sm_handle(
+        f"mutant/rep001-crossjob/{'bad' if fires else 'near'}",
+        bad if fires else near, mesh, replicated_out=("total",))
+
+
 def _copy_kernel(x_ref, o_ref):
     o_ref[...] = x_ref[...]
 
@@ -378,6 +421,10 @@ MUTANTS = (
            lambda: _rep001_fold(True)),
     Mutant("rep001-fold-near", "REP001", False, "program",
            lambda: _rep001_fold(False)),
+    Mutant("rep001-crossjob-bad", "REP001", True, "program",
+           lambda: _rep001_crossjob(True)),
+    Mutant("rep001-crossjob-near", "REP001", False, "program",
+           lambda: _rep001_crossjob(False)),
     Mutant("pal001-bad", "PAL001", True, "kernel",
            lambda: _pal001(True)),
     Mutant("pal001-near", "PAL001", False, "kernel",

@@ -19,21 +19,4 @@ from repro.core.usecase import UseCase, as_map_fn
 from repro.core.usecases import (Histogram, InvertedIndex, WordCount,
                                  histogram_oracle, inverted_index_oracle,
                                  wordcount_oracle)
-
-# The deprecated class-based API (repro.core.api.MapReduceJob) resolves
-# lazily: importing repro.core must neither load the shim module nor
-# emit its DeprecationWarning — the single warning fires on *use*
-# (instantiation), not import.
-_DEPRECATED = {"MapReduceJob": "repro.core.api"}
-
-
-def __getattr__(name):
-    if name in _DEPRECATED:
-        import importlib
-        return getattr(importlib.import_module(_DEPRECATED[name]), name)
-    raise AttributeError(
-        f"module {__name__!r} has no attribute {name!r}")
-
-
-def __dir__():
-    return sorted(list(globals()) + list(_DEPRECATED))
+from repro.core.workdomain import WorkDomain, can_coschedule

@@ -395,6 +395,11 @@ class JobHandle:
                    "cursor": self.cursor,
                    "backend": self.backend.name,
                    "stealing": self.config.stealing,
+                   # cross-job co-scheduling shape: a composite domain
+                   # carry cannot restore into a solo handle (or into a
+                   # domain of a different width) — the shared fleet
+                   # cursor and per-slot work row would be meaningless
+                   "coslots": self.spec.coslots,
                    # recorded for provenance only: the fused and unfused
                    # hot paths are bit-identical and share carry shapes,
                    # so snapshots interchange freely across the flag
@@ -429,6 +434,15 @@ class JobHandle:
                 f"stealing={self.config.stealing} handle would corrupt "
                 "the carry's progress/steal accounting; resubmit with "
                 f"JobConfig(stealing={bool(saved_steal)})")
+        saved_slots = extra.get("coslots")
+        if (saved_slots is not None
+                and int(saved_slots) != self.spec.coslots):
+            raise ValueError(
+                f"checkpoint step {found} was taken with "
+                f"coslots={int(saved_slots)} — restoring into a "
+                f"coslots={self.spec.coslots} handle would misroute the "
+                "composite task/key space; re-form the WorkDomain with "
+                "the same member jobs first")
         saved_part = extra.get("partitioner")
         if saved_part is not None and saved_part != self.spec.partitioner:
             raise ValueError(
@@ -498,6 +512,19 @@ class JobHandle:
         return self
 
     # -- completion ---------------------------------------------------------
+
+    def adopt_result(self, result: JobResult) -> JobHandle:
+        """Install a result computed on this job's behalf by a
+        :class:`~repro.core.workdomain.WorkDomain` (cross-job
+        co-scheduling): the member handle never built an engine of its
+        own — its tasks ran inside the domain's composite program — but
+        the adopted records are exactly the solo outcome (per-job
+        dup-sum exactness). The feed stops prefetching; ``result()``
+        serves the adopted outcome, overflow check included."""
+        assert self._result is None, "job already has a result"
+        self._result = result
+        self.feed.close()
+        return self
 
     def result(self) -> JobResult:
         """Run to completion (whatever mode) and return the JobResult.

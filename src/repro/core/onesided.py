@@ -45,8 +45,28 @@ from repro.kernels.fused_map.ops import fused_map_step
 def _step(spec: JobSpec, map_fn: Callable, carry: EngineCarry, xs):
     task, task_id, rep = xs
     P, cap = spec.n_procs, spec.push_cap
-    # Phase I: Map (+ simulated imbalance via data-dependent repeat loop)
-    keys, vals = map_fn(task, task_id, rep)
+    if spec.coslots > 1:
+        # cross-job co-scheduling (core/workdomain.py): the composite
+        # task id encodes (member job slot, local task id). The map_fn
+        # must see the LOCAL id (use-cases key records by task id), and
+        # every emitted key is offset into the owning job's disjoint
+        # window slice — per-job dup-sum exactness then follows from the
+        # solo argument, window by window. Executed repeats land in the
+        # psum-maintained per-slot row so the scheduler charges tenants
+        # for work actually run, wherever stealing routed it.
+        base = spec.vocab // spec.coslots
+        live = task_id >= 0
+        slot = jnp.where(live, task_id // spec.costride, 0)
+        local_id = jnp.where(live, task_id - slot * spec.costride,
+                             task_id)
+        keys, vals = map_fn(task, local_id, rep)
+        keys = jnp.where(keys == KEY_SENTINEL, keys, keys + slot * base)
+        carry = carry._replace(job_work=carry.job_work + lax.psum(
+            jnp.zeros((spec.coslots,), jnp.int32).at[slot].add(
+                jnp.where(live, rep, 0)), AXIS))
+    else:
+        # Phase I: Map (+ simulated imbalance via data-dependent repeats)
+        keys, vals = map_fn(task, task_id, rep)
     if spec.fused_map:
         # Phases II+III fused into one pallas kernel (kernels/fused_map):
         # local reduce, owner lookup, bucketize and both window folds in
@@ -183,6 +203,11 @@ class OneSidedBackend:
     # ... and JobSpec.fused_map (the pallas-fused per-step hot path,
     # kernels/fused_map), gated by submit() the same way
     supports_fused_map = True
+    # ... and JobSpec.coslots > 1 (cross-job co-scheduling — one engine
+    # program executing a composite task/key space merged from several
+    # program-compatible jobs, core/workdomain.py). The scheduler only
+    # forms WorkDomains over backends advertising this.
+    supports_coschedule = True
 
     def __init__(self):
         self._programs: dict = {}

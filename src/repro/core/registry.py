@@ -54,6 +54,17 @@ class JobSpec:
                                  #   comparing field: it selects a different
                                  #   compiled program, unlike the
                                  #   carry-data ``partitioner`` tag.
+    # cross-job co-scheduling (core/workdomain.py): a WorkDomain merges
+    # K program-compatible jobs into ONE engine program over a composite
+    # task/key space. ``coslots`` is K (1 = ordinary solo job) and
+    # ``costride`` the task-id stride between member jobs: composite
+    # task id = slot * costride + local_id, composite key =
+    # slot * (vocab // coslots) + key. Both compare: a co-scheduled
+    # program routes records per-slot, so it is a distinct compiled
+    # program. Only engines advertising ``supports_coschedule`` accept
+    # coslots > 1.
+    coslots: int = 1
+    costride: int = 0
     # reduce-side key→owner strategy name (core/partition.py). The owner
     # map itself is CARRY DATA, so the compiled program is identical for
     # every partitioner — compare=False keeps this provenance tag out of
@@ -65,6 +76,20 @@ class JobSpec:
     def __post_init__(self):
         if not self.combine_capacity:
             object.__setattr__(self, "combine_capacity", self.vocab)
+        if self.coslots > 1:
+            if self.fused_map:
+                # the fused kernel resolves owners in-kernel over the
+                # solo key space; co-scheduling "cleanly rejects" it
+                raise ValueError(
+                    "fused_map does not compose with co-scheduling "
+                    "(coslots > 1) — the WorkDomain falls back to solo "
+                    "slicing for fused jobs instead")
+            if self.costride <= 0:
+                raise ValueError("coslots > 1 needs a positive costride")
+            if self.vocab % self.coslots:
+                raise ValueError(
+                    f"co-scheduled vocab {self.vocab} must be "
+                    f"coslots={self.coslots} equal per-job windows")
 
 
 # map_fn(task_tokens, task_id, repeat) -> (keys, values); built from a
@@ -141,9 +166,12 @@ def get_backend(name: str) -> Backend:
 # Everything here is *asserted* replicated across ranks by the engine
 # design (psum-maintained progress rows, carried owner maps, psum'd
 # overflow totals); fleetlint's REP001 rule proves it from the jaxpr.
+# ``carry.job_work`` is the cross-job executed-work row (one slot per
+# co-scheduled member job) — psum-maintained exactly like ``carry.work``
+# so every rank agrees on how much of each tenant's work actually ran.
 ENGINE_REPLICATED_CARRY = ("carry.status", "carry.cursor", "carry.work",
-                           "carry.stolen", "carry.owner_map",
-                           "carry.owner_split")
+                           "carry.stolen", "carry.job_work",
+                           "carry.owner_map", "carry.owner_split")
 
 
 @dataclass(frozen=True)

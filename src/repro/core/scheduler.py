@@ -84,10 +84,17 @@ class TenantStats:
 @dataclass
 class SliceStats:
     """What one scheduler slice executed — handed to ``on_slice`` hooks
-    (e.g. ``repro.ft.straggler.rebalance_hook``)."""
+    (e.g. ``repro.ft.straggler.rebalance_hook``) and the unit of tenant
+    service charging: ``work_executed`` is what lands in
+    ``TenantStats.work``, so co-scheduled and solo slices are charged
+    comparably (a domain slice executes SEVERAL tenants' tasks — each
+    tenant is charged its slots' share from ``carry.job_work``, never
+    the whole slice)."""
     seconds: float
     segments: int
     work_per_rank: np.ndarray    # assigned work consumed this slice (P,)
+    work_executed: int = 0       # compute-repeats actually executed for
+                                 #   the charged tenant this slice
 
 
 @dataclass
@@ -106,9 +113,15 @@ class ScheduledJob:
     submitted_at: float = 0.0    # perf_counter stamps
     finished_at: float | None = None
     error: BaseException | None = None
+    # cross-job co-scheduling: set when this job is a member of a
+    # WorkDomain (core/workdomain.py) — its tasks execute inside the
+    # domain's composite program, so slicing/readiness delegate there
+    domain: object | None = None
 
     @property
     def ready(self) -> bool:
+        if self.domain is not None:
+            return self.domain.ready()
         return self.handle.ready()
 
 
@@ -200,18 +213,34 @@ class JobScheduler:
                     every feed's in-flight prefetch bytes (``None`` =
                     unbounded).
     slice_segments: segments per time slice (1 = finest interleaving).
+    coschedule:     form :class:`~repro.core.workdomain.WorkDomain`\\ s
+                    at activation: program-compatible eligible jobs
+                    merge into ONE composite engine run, so one device
+                    step executes tasks from several tenants and fast
+                    ranks backfill across job boundaries (global work
+                    stealing). Ineligible jobs (fused_map, sampling
+                    partitioners, '2s') cleanly fall back to solo
+                    slicing. Each tenant is charged the work its slots
+                    actually *executed* (``carry.job_work``), so fair
+                    share stays fair under mixed slices.
+    copack:         member segments packed per domain segment
+                    (default: the domain size K).
     """
 
     def __init__(self, *, policy: str | SchedulePolicy = "fair",
                  mesh=None, max_pending: int | None = None,
                  max_active: int | None = None,
                  max_live_bytes: int | None = None,
-                 slice_segments: int = 1):
+                 slice_segments: int = 1,
+                 coschedule: bool = False,
+                 copack: int | None = None):
         self.policy = resolve_policy(policy)
         self.mesh = mesh
         self.max_pending = max_pending
         self.max_active = max_active
         self.slice_segments = int(slice_segments)
+        self.coschedule = bool(coschedule)
+        self.copack = copack
         self.budget = (FeedBudget(max_live_bytes)
                        if max_live_bytes else None)
         self.jobs: list[ScheduledJob] = []
@@ -219,6 +248,7 @@ class JobScheduler:
         self.run_started_at: float | None = None
         self._by_name: dict[str, ScheduledJob] = {}
         self._programs: dict = {}        # (backend, spec, map_fn) -> fns
+        self._domains: list = []         # live WorkDomains, admission order
         self._n_procs: int | None = None
 
     # -- admission -----------------------------------------------------------
@@ -276,9 +306,15 @@ class JobScheduler:
         admission before re-admitting a fresh handle and restoring it
         from the per-job snapshot. Returns the evicted record (its
         accounting is final; tenant totals already include it)."""
-        job = self._by_name.pop(name, None)
+        job = self._by_name.get(name)
         if job is None:
             raise KeyError(f"no job named {name!r} to evict")
+        if job.domain is not None and not job.domain.done:
+            raise RuntimeError(
+                f"job {name!r} is co-scheduled in a live WorkDomain — "
+                "members share one engine run and cannot be evicted "
+                "individually (fail/finish the domain first)")
+        del self._by_name[name]
         self.jobs.remove(job)
         job.handle.close()
         return job
@@ -289,6 +325,8 @@ class JobScheduler:
         readable on their handles."""
         for j in self.jobs:
             j.handle.close()
+        for d in self._domains:
+            d.close()
 
     # -- introspection -------------------------------------------------------
 
@@ -345,17 +383,75 @@ class JobScheduler:
         h.feed.prime()
         job.state = LIVE
 
+    def _form_domain(self, group: list[ScheduledJob], *,
+                     pack=None, stride=None):
+        """Merge a program-compatible group into one WorkDomain and mark
+        every member live. The domain's composite program registers in
+        the jit memo like any solo program (its JobSpec differs by
+        ``coslots``/``costride``, so it IS a distinct compile — paid
+        once per domain shape, shared by same-shape domains)."""
+        from repro.core.workdomain import WorkDomain
+        domain = WorkDomain(
+            [j.handle for j in group], names=[j.name for j in group],
+            priorities=[j.priority for j in group], mesh=self.mesh,
+            pack=pack if pack is not None else self.copack,
+            stride=stride, feed_budget=self.budget)
+        h = domain.handle
+        h._ensure_engine()
+        key = (h.backend.name, h.spec, id(h._map_fn))
+        prev = self._programs.setdefault(key, h._seg_fns)
+        assert prev is h._seg_fns, "domain programs must memoize too"
+        h.feed.prime()
+        for j in group:
+            j.domain = domain
+            j.state = LIVE
+        self._domains.append(domain)
+        return domain
+
     def _activate(self):
         n_live = sum(j.state == LIVE for j in self.jobs)
+        batch: list[ScheduledJob] = []
         for job in self.jobs:
             if job.state != QUEUED:
                 continue
             if self.max_active is not None and n_live >= self.max_active:
                 break
-            self._mark_live(job)
+            batch.append(job)
             n_live += 1
+        if self.coschedule:
+            # the co-scheduling pass: program-compatible eligible jobs
+            # activated together merge into one WorkDomain; everyone
+            # else (fused, sampled, '2s', singletons) slices solo
+            from repro.core.workdomain import can_coschedule, \
+                coschedule_key
+            groups: dict = defaultdict(list)
+            for job in batch:
+                if can_coschedule(job.handle):
+                    groups[coschedule_key(job.handle)].append(job)
+            for group in groups.values():
+                if len(group) >= 2:
+                    self._form_domain(group)
+        for job in batch:
+            if job.state == QUEUED:
+                self._mark_live(job)
+
+    def _charge(self, job: ScheduledJob, st: SliceStats):
+        """Fold one slice's EXECUTED service into the job's and its
+        tenant's accounting — the single place service is charged, so
+        solo and co-scheduled slices are charged on the same basis
+        (``st.work_executed``, never slice counts)."""
+        job.segments_run += st.segments
+        job.work_done += st.work_executed
+        job.wall += st.seconds
+        ts = self.tenants[job.tenant]
+        ts.segments += st.segments
+        ts.work += st.work_executed
+        ts.wall += st.seconds
 
     def _slice(self, job: ScheduledJob, raise_on_error: bool):
+        if job.domain is not None:
+            self._slice_domain(job, job.domain, raise_on_error)
+            return
         h = job.handle
         c0 = h.cursor
         t0 = time.perf_counter()
@@ -376,13 +472,12 @@ class JobScheduler:
         work = (reps * (ids >= 0)).sum(axis=1).astype(np.int64)
         seg_w = h.feed.segment
         segs = (c1 - c0 + seg_w - 1) // seg_w
-        job.segments_run += segs
-        job.work_done += int(work.sum())
-        job.wall += dt
+        # solo slices execute exactly their assignment (stealing only
+        # moves work between ranks inside the job), so assigned == executed
+        st = SliceStats(seconds=dt, segments=segs, work_per_rank=work,
+                        work_executed=int(work.sum()))
+        self._charge(job, st)
         ts = self.tenants[job.tenant]
-        ts.segments += segs
-        ts.work += int(work.sum())
-        ts.wall += dt
         if job.state == DONE:
             ts.jobs_done += 1
             job.finished_at = time.perf_counter()
@@ -390,8 +485,57 @@ class JobScheduler:
             ts.jobs_failed += 1
             job.finished_at = time.perf_counter()
         elif job.on_slice is not None:
-            job.on_slice(h, SliceStats(seconds=dt, segments=segs,
-                                       work_per_rank=work))
+            job.on_slice(h, st)
+
+    def _slice_domain(self, picked: ScheduledJob, domain,
+                      raise_on_error: bool):
+        """Advance a WorkDomain one slice: the composite segment
+        executes a MIX of the member tenants' tasks (whichever the
+        fleet-wide claims routed to fast ranks); each tenant is charged
+        the work its slots actually executed (``carry.job_work``
+        deltas), and members whose columns fully drained finalize
+        early. A failing domain fails every member — they share one
+        engine run."""
+        members = [self._by_name[n] for n in domain.names]
+        jw0 = domain.job_work()
+        c0 = domain.handle.cursor
+        t0 = time.perf_counter()
+        try:
+            domain.step(self.slice_segments)
+            finished = domain.collect_finished()
+        except Exception as e:       # noqa: BLE001 — isolate the domain
+            domain.close()
+            now = time.perf_counter()
+            for j in members:
+                if j.state == LIVE:
+                    j.state = FAILED
+                    j.error = e
+                    j.finished_at = now
+                    self.tenants[j.tenant].jobs_failed += 1
+            if raise_on_error:
+                raise
+            return
+        dt = time.perf_counter() - t0
+        dw = domain.job_work() - jw0
+        seg_w = domain.handle.feed.segment
+        segs = (domain.handle.cursor - c0 + seg_w - 1) // seg_w
+        total = max(int(dw.sum()), 1)
+        for slot, j in enumerate(members):
+            if int(dw[slot]) == 0 and j is not picked:
+                continue
+            self._charge(j, SliceStats(
+                seconds=dt * (int(dw[slot]) / total),
+                # the picked member "funded" the slice; segment counts
+                # are informational — service is the work charged above
+                segments=segs if j is picked else 0,
+                work_per_rank=np.zeros((self._n_procs or 0,), np.int64),
+                work_executed=int(dw[slot])))
+        now = time.perf_counter()
+        for name in finished:
+            j = self._by_name[name]
+            j.state = DONE
+            j.finished_at = now
+            self.tenants[j.tenant].jobs_done += 1
 
     def run_until_complete(self, *, max_slices: int | None = None,
                            raise_on_error: bool = False
@@ -429,8 +573,16 @@ class JobScheduler:
         if isinstance(fleet, str):
             fleet = FleetCheckpoint(fleet)
         for j in self.jobs:
-            if j.state == LIVE:
+            if j.state == LIVE and j.domain is None:
                 j.handle.checkpoint(fleet.manager(j.name))
+        # a WorkDomain snapshots ONCE: the composite carry + the shared
+        # fleet cursor + merged grids — members have no solo engine to
+        # snapshot, and restore re-forms the domain from the manifest
+        # before seeking, so a mid-co-schedule restore is
+        # record-identical to the uninterrupted run
+        for d in self._domains:
+            if not d.done:
+                d.checkpoint(fleet.manager(self._domain_name(d)))
         fleet.wait()          # manifest must never name a torn snapshot
         fleet.save_state({
             "policy": self.policy.name,
@@ -440,8 +592,18 @@ class JobScheduler:
                       "work_done": j.work_done, "wall": j.wall}
                      for j in self.jobs],
             "tenants": {t: asdict(s) for t, s in self.tenants.items()},
+            "domains": [{"name": self._domain_name(d),
+                         "members": list(d.names),
+                         "stride": d.stride, "pack": d.pack}
+                        for d in self._domains],
         })
         return fleet
+
+    def _domain_name(self, domain) -> str:
+        """Stable snapshot name for a domain: keyed by its first
+        member's admission seq — deterministic across the resubmission
+        restore() requires."""
+        return f"codomain-{self._by_name[domain.names[0]].seq}"
 
     def restore(self, fleet) -> JobScheduler:
         """Resume a fleet snapshot into *this* scheduler: re-``submit``
@@ -468,6 +630,22 @@ class JobScheduler:
             job.segments_run = rec["segments_run"]
             job.work_done = rec["work_done"]
             job.wall = rec["wall"]
+        # re-form co-scheduling domains over the resubmitted members and
+        # seek them to the shared snapshot: members have no solo snapshot
+        # (they share one engine run), so this is the only path that
+        # resumes them. collect_finished() re-adopts results for members
+        # that had already drained pre-snapshot; tenant counters are NOT
+        # bumped here — they are restored wholesale below.
+        for rec in state.get("domains", []):
+            group = [self._by_name[n] for n in rec["members"]]
+            domain = self._form_domain(group, pack=rec["pack"],
+                                       stride=rec["stride"])
+            if fleet.has_snapshot(rec["name"]):
+                domain.restore(fleet.manager(rec["name"]))
+            for name in domain.collect_finished():
+                j = self._by_name[name]
+                j.state = DONE
+                j.finished_at = time.perf_counter()
         for t, s in state.get("tenants", {}).items():
             self.tenants[t] = TenantStats(**s)
         return self

@@ -135,6 +135,85 @@ def compact_columns(task_ids: jnp.ndarray):
 
 
 # ---------------------------------------------------------------------------
+# fleet-wide cursor — composite (job, task) grids for cross-job stealing
+# ---------------------------------------------------------------------------
+#
+# ``claim_step`` itself is already fleet-ready: it schedules over opaque
+# deque columns, so feeding it a grid whose columns come from SEVERAL
+# jobs turns intra-job stealing into global work stealing with the same
+# pure/replicated/exactly-once argument (each composite column is still
+# popped exactly once). What the fleet adds is the *encoding*: a
+# composite task id ``slot * stride + local_id`` names (member job,
+# task), and :func:`fleet_merge` lays the members' columns out per rank
+# with a job-priority lane ordering — the shared cursor every rank's
+# claims draw from. :func:`composite_slots` inverts the encoding.
+
+def composite_slots(task_ids, stride: int):
+    """Member-job slot of each composite task id (-1 for padding)."""
+    ids = np.asarray(task_ids, np.int64)
+    return np.where(ids >= 0, ids // int(stride), -1).astype(np.int32)
+
+
+def fleet_merge(task_ids, repeats, *, stride: int,
+                priorities=None) -> tuple[np.ndarray, np.ndarray]:
+    """Merge K member assignment grids into one fleet grid.
+
+    ``task_ids`` / ``repeats`` are parallel sequences of (P, T_j) member
+    grids (padding id -1, any T_j). Member ``j``'s local ids are lifted
+    to composite ids ``j * stride + local``; per rank the columns are
+    ordered by **priority lane** (higher ``priorities[j]`` first, stable
+    in member order within a tie) and round-robin interleaved across the
+    members of a lane — co-resident equal-priority jobs progress
+    together, while a higher lane's tasks sit at the head of every
+    deque so they are claimed (and stolen) first. Returns ``(ids,
+    reps)`` of shape (P, N), -1/1 padded.
+
+    A single-member merge is the identity (ids unchanged, order
+    preserved) — the single-job fleet reduces bit-identically to the
+    solo schedule, which the property tests pin.
+    """
+    K = len(task_ids)
+    assert K == len(repeats) and K >= 1
+    stride = int(stride)
+    prios = ([0] * K if priorities is None else list(priorities))
+    assert len(prios) == K
+    grids = [np.asarray(g, np.int32) for g in task_ids]
+    rgrids = [np.asarray(r, np.int32) for r in repeats]
+    P = grids[0].shape[0]
+    for g, r in zip(grids, rgrids):
+        assert g.shape == r.shape and g.shape[0] == P, \
+            "member grids must share the rank count"
+        assert g.max(initial=-1) < stride, \
+            f"member local ids must fit the stride ({stride})"
+    # lanes: higher priority first, admission (member) order within
+    lanes: dict[int, list[int]] = {}
+    for j in sorted(range(K), key=lambda j: (-prios[j], j)):
+        lanes.setdefault(prios[j], []).append(j)
+    rows_ids: list[list[int]] = [[] for _ in range(P)]
+    rows_reps: list[list[int]] = [[] for _ in range(P)]
+    for r in range(P):
+        for prio in sorted(lanes, reverse=True):
+            members = lanes[prio]
+            cols = [[(int(t), int(rep)) for t, rep in
+                     zip(grids[j][r], rgrids[j][r]) if t >= 0]
+                    for j in members]
+            width = max((len(c) for c in cols), default=0)
+            for k in range(width):        # round-robin interleave
+                for j, c in zip(members, cols):
+                    if k < len(c):
+                        t, rep = c[k]
+                        rows_ids[r].append(j * stride + t)
+                        rows_reps[r].append(rep)
+    N = max((len(row) for row in rows_ids), default=0)
+    ids = np.full((P, max(N, 1)), -1, np.int32)
+    reps = np.ones((P, max(N, 1)), np.int32)
+    for r in range(P):
+        ids[r, : len(rows_ids[r])] = rows_ids[r]
+        reps[r, : len(rows_reps[r])] = rows_reps[r]
+    return ids, reps
+
+
+# ---------------------------------------------------------------------------
 # host replay — the same claim function, driven over a whole grid
 # ---------------------------------------------------------------------------
 
@@ -147,6 +226,11 @@ class StealSchedule:
     exec_reps: np.ndarray    # (P, n) compute-repeats executed (0 idle)
     work: np.ndarray         # (P,) final cumulative work row
     stolen: np.ndarray       # (P,) tasks each rank executed for a peer
+    slot_work: np.ndarray | None = None
+                             # (coslots,) executed work per member-job
+                             #   slot when replaying a composite fleet
+                             #   grid — the host twin of the engine's
+                             #   psum-maintained ``carry.job_work`` row
 
     @property
     def n_stolen(self) -> int:
@@ -163,7 +247,9 @@ def _jitted_claim(margin: int):
 
 def steal_schedule(task_ids: np.ndarray, repeats: np.ndarray,
                    margin: int = STEAL_MARGIN,
-                   work0: np.ndarray | None = None) -> StealSchedule:
+                   work0: np.ndarray | None = None,
+                   coslots: int = 1,
+                   costride: int = 0) -> StealSchedule:
     """Replay :func:`claim_step` over one (P, n) assignment grid.
 
     This is bit-identical to the schedule the device scan realizes (it
@@ -171,6 +257,10 @@ def steal_schedule(task_ids: np.ndarray, repeats: np.ndarray,
     which is what lets the benchmark model a steal run's makespan and
     the tests check exactly-once without touching the engine.
     ``work0`` seeds the progress row (cumulative across segments).
+
+    For a composite fleet grid (:func:`fleet_merge`), pass the domain's
+    ``coslots``/``costride`` to also get ``slot_work`` — executed work
+    split by member-job slot, matching ``carry.job_work`` on device.
     """
     ids = np.asarray(task_ids, np.int32)
     reps = np.asarray(repeats, np.int32)
@@ -201,5 +291,13 @@ def steal_schedule(task_ids: np.ndarray, repeats: np.ndarray,
         work = work + exec_reps[:, k]
         stolen += (live & (sr != np.arange(P))
                    & (exec_ids[:, k] >= 0)).astype(np.int32)
+    if coslots > 1:
+        assert costride > 0, "composite replay needs the domain stride"
+        slot_work = np.zeros((coslots,), np.int64)
+        done = exec_ids >= 0
+        np.add.at(slot_work, exec_ids[done] // costride,
+                  exec_reps[done].astype(np.int64))
+    else:
+        slot_work = np.asarray([int(exec_reps.sum())], np.int64)
     return StealSchedule(src_rank, src_col, exec_ids, exec_reps,
-                         work, stolen)
+                         work, stolen, slot_work)

@@ -126,6 +126,13 @@ class TwoSidedBackend:
                         lambda: self._build_segment_fns(spec, map_fn, mesh))
 
     def _build_segment_fns(self, spec: JobSpec, map_fn: Callable, mesh):
+        if spec.coslots > 1:
+            # no supports_coschedule: the bulk path never learned to
+            # route composite keys — reject instead of mis-reducing
+            raise ValueError(
+                "backend '2s' does not support cross-job co-scheduling "
+                "(coslots > 1) — WorkDomains form over '1s' only")
+
         def seg(carry, tok, tid, rep):
             BK, BV, OFK, OFV = _map_all(spec, map_fn, tok, tid, rep,
                                         carry.owner_map, carry.owner_split)

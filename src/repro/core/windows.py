@@ -102,6 +102,12 @@ class EngineCarry(NamedTuple):
     # ride the carry so checkpoints capture mid-job claim state for free.
     work: jnp.ndarray        # (P,) int32 progress row
     stolen: jnp.ndarray      # (P,) int32 steal counters
+    # cross-job co-scheduling (core/workdomain.py): executed work per
+    # member job *slot*, psum-maintained like ``work``. Solo jobs carry
+    # a single always-zero slot (coslots == 1 skips the update — zero
+    # overhead on the solo path); a WorkDomain reads the deltas to
+    # charge each tenant for work actually EXECUTED in a mixed slice.
+    job_work: jnp.ndarray    # (coslots,) int32 executed work per job
     # reduce-side partitioning state (core/partition.py): the dense
     # key→owner map and per-key replica counts, replicated per rank.
     # Riding the carry (not the jitted program) means one compiled
@@ -124,6 +130,8 @@ def init_carry(spec) -> EngineCarry:
         cursor=jnp.int32(0),
         work=jnp.zeros((P,), jnp.int32),
         stolen=jnp.zeros((P,), jnp.int32),
+        job_work=jnp.zeros((getattr(spec, "coslots", 1) or 1,),
+                           jnp.int32),
         # the hash rule as a dense map — bit-identical to owner_of, and
         # the seed a skew-aware partitioner overwrites before step 0
         owner_map=owner_of(jnp.arange(spec.vocab, dtype=jnp.int32), P),

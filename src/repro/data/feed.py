@@ -172,10 +172,23 @@ class SegmentFeed:
         ids = self._ids[:, self._cursor:]
         return np.sort(ids[ids >= 0])
 
+    def consumed_task_ids(self) -> np.ndarray:
+        """Global ids of the already-executed tasks (columns before the
+        cursor), sorted. Over a composite fleet grid these are (job,
+        task) ids — how a :class:`~repro.core.workdomain.WorkDomain`
+        detects that one member job fully drained mid-co-schedule and
+        can be finalized while its siblings keep running."""
+        ids = self._ids[:, : self._cursor]
+        return np.sort(ids[ids >= 0])
+
     def read_tasks(self, task_ids) -> np.ndarray:
         """Serve arbitrary tasks by *global id*, independent of the
         assignment grids or cursor — the host-side twin of the engine's
-        steal fetch. Reads are pure, so serving a task to a rank other
+        steal fetch. Over a :class:`~repro.data.source.FleetSource` the
+        global id is a composite (job, task) id, so one feed serves task
+        reads across job boundaries — the cross-job steal fetch and a
+        domain checkpoint restore address members through this same
+        path. Reads are pure, so serving a task to a rank other
         than its original assignee replays nothing and disturbs no
         stream position; the bytes still count into ``stats``."""
         from repro.core.planner import read_tasks

@@ -31,7 +31,13 @@ Implementations:
                                generated per fixed-size block on read
                                (offset-deterministic, zero bytes stored);
   * :class:`ConcatSource`    — concatenation of sources (sharded corpora
-                               on disk presented as one stream).
+                               on disk presented as one stream);
+  * :class:`FleetSource`     — K member sources laid out at a fixed
+                               element stride, so a composite (job, task)
+                               id addresses any member's task through one
+                               unmodified ``TaskPlan`` — the read path of
+                               cross-job co-scheduling
+                               (``repro.core.workdomain``).
 """
 from __future__ import annotations
 
@@ -155,6 +161,46 @@ class ZipfSource:
             out[lo - offset: hi - offset] = blk[lo - b * self.block:
                                                 hi - b * self.block]
         return out
+
+
+class FleetSource:
+    """K member sources at a fixed per-member element stride.
+
+    Member ``j`` occupies the element window ``[j * stride, (j + 1) *
+    stride)``; within it, the member's own elements come first and the
+    remainder is an empty *pad region* (reads there return nothing, so
+    the planner's sentinel padding matches a solo run bit-for-bit).
+    With ``stride = member_tasks_ceiling * task_size``, the composite
+    task id ``slot * costride + local`` of a
+    :class:`~repro.core.workdomain.WorkDomain` lands on exactly the
+    bytes the member's solo plan would read — ``plan.file_offset`` is
+    reused unchanged, which is what makes cross-job task reads (and the
+    engine's cross-job steal fetch) exact by construction.
+
+    A read never crosses a member boundary: it is truncated at the end
+    of its member window (the DataSource short-read contract, applied
+    per member).
+    """
+
+    def __init__(self, sources: Sequence[DataSource], stride: int):
+        self._sources = [as_source(s) for s in sources]
+        self.stride = int(stride)
+        for j, s in enumerate(self._sources):
+            if s.len_elements() > self.stride:
+                raise ValueError(
+                    f"member {j} holds {s.len_elements()} elements — more "
+                    f"than the fleet stride {self.stride}")
+
+    def len_elements(self) -> int:
+        return self.stride * len(self._sources)
+
+    def read(self, offset: int, size: int) -> np.ndarray:
+        j = offset // self.stride
+        if not 0 <= j < len(self._sources):
+            return np.empty((0,), np.int32)
+        local = offset - j * self.stride
+        take = min(size, self.stride - local)   # stop at the boundary
+        return self._sources[j].read(local, take)
 
 
 class ConcatSource:

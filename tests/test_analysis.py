@@ -72,6 +72,26 @@ def test_shipping_programs_clean(bname, cname, stealing):
         assert got == [], f"{handle.name}: {[str(f) for f in got]}"
 
 
+@pytest.mark.parametrize("stealing", [False, True])
+def test_coscheduled_engine_lints_clean(stealing):
+    """The composite WorkDomain program ('1s' with coslots=2): the
+    key-window offset and the psum-maintained carry.job_work row must
+    satisfy the same replication contract as the solo engine."""
+    backend = get_backend("1s")
+    usecase = dict(corpus.SHIPPING_CASES)["wordcount"]
+    mesh = corpus.procs_mesh()
+    spec = JobSpec(vocab=usecase.window * 2, task_size=8, push_cap=16,
+                   n_procs=int(mesh.devices.size), segment=2,
+                   stealing=stealing, coslots=2, costride=2)
+    handles = backend.trace_handles(spec, as_map_fn(usecase), mesh,
+                                    tag="1s/wordcount+cosched")
+    # the new carry row is part of the asserted replication contract
+    assert any("carry.job_work" in h.replicated_out for h in handles)
+    for handle in handles:
+        got = rules.check_program(handle)
+        assert got == [], f"{handle.name}: {[str(f) for f in got]}"
+
+
 @pytest.mark.parametrize("kname", [k.name for k in
                                    corpus.shipping_kernels()])
 def test_shipping_kernels_clean(kname):

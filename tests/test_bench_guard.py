@@ -74,6 +74,21 @@ FIG13 = {
                  "recovery_win_vs_restart_pct": 36.0,
                  "recovery_beats_restart": True},
 }
+FIG14 = {
+    "model": {"16": {"fair": {}, "fair+cosched": {}}},
+    "real": {"P": 8, "per_k": {"4": {"fleets": {}}}},
+    "criteria": {"max_K": 16,
+                 "cosched_makespan_win_pct": 56.0,
+                 "cosched_beats_fair_makespan": True,
+                 "cosched_p95_win_pct": 62.0,
+                 "jain_fair": 0.55,
+                 "jain_cosched": 0.62,
+                 "cosched_beats_fair_jain": True,
+                 "all_jobs_exact": True,
+                 "crossjob_steals_real": 94,
+                 "crossjob_stealing_active": True,
+                 "one_domain_per_fleet": True},
+}
 
 
 @pytest.fixture()
@@ -84,15 +99,16 @@ def dirs(tmp_path):
     baseline.mkdir()
 
     def write(fig8=FIG8, fig9=FIG9, fig10=FIG10, fig11=FIG11,
-              fig12=FIG12, fig13=FIG13, fresh_fig8=None, fresh_fig9=None,
-              fresh_fig10=None, fresh_fig11=None, fresh_fig12=None,
-              fresh_fig13=None):
+              fig12=FIG12, fig13=FIG13, fig14=FIG14, fresh_fig8=None,
+              fresh_fig9=None, fresh_fig10=None, fresh_fig11=None,
+              fresh_fig12=None, fresh_fig13=None, fresh_fig14=None):
         (baseline / "BENCH_io_overlap.json").write_text(json.dumps(fig8))
         (baseline / "BENCH_imbalance.json").write_text(json.dumps(fig9))
         (baseline / "BENCH_keyskew.json").write_text(json.dumps(fig10))
         (baseline / "BENCH_multitenant.json").write_text(json.dumps(fig11))
         (baseline / "BENCH_roofline.json").write_text(json.dumps(fig12))
         (baseline / "BENCH_elastic.json").write_text(json.dumps(fig13))
+        (baseline / "BENCH_crossjob.json").write_text(json.dumps(fig14))
         (results / "fig8_io_overlap.json").write_text(
             json.dumps(fresh_fig8 if fresh_fig8 is not None else fig8))
         (results / "fig9_imbalance.json").write_text(
@@ -105,6 +121,8 @@ def dirs(tmp_path):
             json.dumps(fresh_fig12 if fresh_fig12 is not None else fig12))
         (results / "fig13_elastic.json").write_text(
             json.dumps(fresh_fig13 if fresh_fig13 is not None else fig13))
+        (results / "fig14_crossjob.json").write_text(
+            json.dumps(fresh_fig14 if fresh_fig14 is not None else fig14))
 
     return str(results), str(baseline), write
 
@@ -118,8 +136,10 @@ def test_clean_artifacts_pass(dirs):
     assert check("fig11", results, baseline) == []
     assert check("fig12", results, baseline) == []
     assert check("fig13", results, baseline) == []
+    assert check("fig14", results, baseline) == []
     assert main(["fig8", "fig9", "fig10", "fig11", "fig12", "fig13",
-                 "--results", results, "--baseline", baseline]) == 0
+                 "fig14", "--results", results, "--baseline",
+                 baseline]) == 0
 
 
 def test_missing_fresh_artifact_fails(dirs, tmp_path):
@@ -306,6 +326,51 @@ def test_fig13_gates(dirs):
     write(fresh_fig13=pointless)
     assert any("recovery_beats_restart" in e
                for e in check("fig13", results, baseline))
+
+
+def test_fig14_gates(dirs):
+    """The cross-job guard: the co-scheduled makespan win may shrink at
+    most 30pp below baseline (56); beating fair on makespan AND Jain,
+    per-job exactness, and live cross-rank steals are hard-required,
+    with an absolute 0.30 Jain floor on the co-scheduled fleet."""
+    results, baseline, write = dirs
+    ok = copy.deepcopy(FIG14)
+    ok["criteria"]["cosched_makespan_win_pct"] = 30.0  # within 30pp of 56
+    write(fresh_fig14=ok)
+    assert check("fig14", results, baseline) == []
+    shrunk = copy.deepcopy(FIG14)
+    shrunk["criteria"]["cosched_makespan_win_pct"] = 10.0  # breach
+    write(fresh_fig14=shrunk)
+    assert any("cosched_makespan_win_pct" in e
+               for e in check("fig14", results, baseline))
+    # a domain that wins makespan by starving its small members fails
+    # the fairness leg outright
+    unfair = copy.deepcopy(FIG14)
+    unfair["criteria"]["cosched_beats_fair_jain"] = False
+    write(fresh_fig14=unfair)
+    assert any("cosched_beats_fair_jain" in e and "expected true" in e
+               for e in check("fig14", results, baseline))
+    # ... and the Jain floor is absolute, baseline notwithstanding
+    starved_base = copy.deepcopy(FIG14)
+    starved_base["criteria"]["jain_cosched"] = 0.10
+    starved = copy.deepcopy(FIG14)
+    starved["criteria"]["jain_cosched"] = 0.15
+    write(fig14=starved_base, fresh_fig14=starved)
+    assert any("jain_cosched" in e and "floor" in e
+               for e in check("fig14", results, baseline))
+    # a co-scheduled job diverging from its solo records is the one
+    # unforgivable regression
+    inexact = copy.deepcopy(FIG14)
+    inexact["criteria"]["all_jobs_exact"] = False
+    write(fresh_fig14=inexact)
+    assert any("all_jobs_exact" in e and "expected true" in e
+               for e in check("fig14", results, baseline))
+    # a "win" with zero cross-rank steals is a bookkeeping artifact
+    idle = copy.deepcopy(FIG14)
+    idle["criteria"]["crossjob_stealing_active"] = False
+    write(fresh_fig14=idle)
+    assert any("crossjob_stealing_active" in e
+               for e in check("fig14", results, baseline))
 
 
 def test_fig11_fairness_floor_is_absolute(dirs):

@@ -257,41 +257,26 @@ def test_custom_usecase_with_local_reduce_combiner(tokens):
 
 
 # ---------------------------------------------------------------------------
-# deprecated shim still works (one release)
+# deprecated shim is gone (was kept one release, removed in PR 9)
 # ---------------------------------------------------------------------------
 
-def test_deprecated_shim_not_imported_eagerly():
-    """Importing repro.core must neither load the MapReduceJob shim
-    module nor emit any DeprecationWarning; the (single) warning fires
-    on use. Subprocess: this process has long imported repro.core."""
-    import subprocess
-    import sys
-    code = (
-        "import sys, warnings\n"
-        "with warnings.catch_warnings():\n"
-        "    warnings.simplefilter('error', DeprecationWarning)\n"
-        "    import repro.core\n"
-        "assert 'repro.core.api' not in sys.modules, 'shim loaded eagerly'\n"
-        "with warnings.catch_warnings(record=True) as rec:\n"
-        "    warnings.simplefilter('always')\n"
-        "    cls = repro.core.MapReduceJob       # attribute access: no warning\n"
-        "    assert 'repro.core.api' in sys.modules\n"
-        "    assert not rec, [str(w.message) for w in rec]\n"
-        "    cls(backend='1s')                   # use: exactly one warning\n"
-        "deps = [w for w in rec if issubclass(w.category, DeprecationWarning)]\n"
-        "assert len(deps) == 1, [str(w.message) for w in rec]\n"
-        "print('LAZY-SHIM-OK')\n"
-    )
-    out = subprocess.run([sys.executable, "-c", code], text=True,
-                         capture_output=True)
-    assert out.returncode == 0, out.stderr[-2000:]
-    assert "LAZY-SHIM-OK" in out.stdout
+def test_deprecated_shim_removed():
+    """The class-based MapReduceJob shim and its lazy __getattr__ hook
+    were removed after their one-release migration window: the old names
+    must fail loudly (AttributeError / ImportError), not half-work."""
+    import importlib.util
+    import repro.core
+    with pytest.raises(AttributeError, match="MapReduceJob"):
+        repro.core.MapReduceJob
+    assert importlib.util.find_spec("repro.core.api") is None
+    assert importlib.util.find_spec("repro.core.wordcount") is None
+    assert "MapReduceJob" not in dir(repro.core)
 
 
-def test_mapreducejob_shim_deprecated_but_working(tokens):
-    from repro.core.wordcount import WordCount as LegacyWordCount
-    with pytest.warns(DeprecationWarning):
-        job = LegacyWordCount(backend="1s")
-    job.init(tokens, vocab=VOCAB, task_size=TASK, push_cap=256, n_procs=1)
-    job.run()
-    assert job.result_dict() == wordcount_oracle(tokens, VOCAB)
+def test_migrated_wordcount_replaces_shim(tokens):
+    """The submit() one-liner the shim's migration table pointed at —
+    the exact replacement for the removed subclass-style WordCount."""
+    cfg = JobConfig(usecase=WordCount(vocab=VOCAB), backend="1s",
+                    task_size=TASK, push_cap=256, n_procs=1)
+    res = submit(cfg, tokens).result()
+    assert res.records == wordcount_oracle(tokens, VOCAB)
