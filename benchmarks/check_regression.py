@@ -224,6 +224,39 @@ CHECKS: dict[str, dict] = {
             "criteria.one_domain_per_fleet",
         ],
     },
+    "fig15": {
+        "fresh": "fig15_coded.json",
+        "baseline": "BENCH_coded.json",
+        "required": ["skews", "code_rates", "real.per_skew",
+                     "bytes.per_step_blocks",
+                     "criteria.shuffle_ratio_r2_at_max_skew",
+                     "criteria.bytes_win_r2_pct",
+                     "criteria.records_equal",
+                     "criteria.oracle_exact"],
+        "gates": [
+            # the coded exchange's shuffle-bytes win over r=1 is
+            # structural ((P/r)/(P-1) of the reference at fixed P=6);
+            # it may shrink vs the committed trajectory by at most 10
+            # percentage points before something is off with the
+            # accounting or the exchange itself
+            ("criteria.bytes_win_r2_pct", "min", 10.0),
+        ],
+        "floors": [
+            # absolute floor: a silently-degenerate r=1 fallback (the
+            # coded path quietly not engaging) scores a 0% win and must
+            # fail regardless of what the baseline says
+            ("criteria.bytes_win_r2_pct", 20.0),
+        ],
+        "require_true": [
+            # the acceptance headline: r=2 shuffle bytes at most 0.65x
+            # the r=1 reference at the largest skew point
+            "criteria.r2_le_065_at_max_skew",
+            # exactness on real runs, r in {2,3} and the stolen arm:
+            # record-identical to r=1 and to the host oracle
+            "criteria.records_equal",
+            "criteria.oracle_exact",
+        ],
+    },
 }
 
 

@@ -55,6 +55,8 @@ REGISTRY: tuple[Bench, ...] = (
           smoke=True, group="chaos"),
     Bench("fig14", "benchmarks.fig14_crossjob", "fig14_crossjob.json",
           smoke=True),
+    Bench("fig15", "benchmarks.fig15_coded", "fig15_coded.json",
+          smoke=True),
     Bench("moe", "benchmarks.moe_dispatch_bench", "moe_dispatch.json"),
     Bench("roofline", "benchmarks.roofline", "roofline.json"),
 )

@@ -75,6 +75,24 @@ def shipping_programs(mesh: Mesh | None = None,
                 handles.extend(backend.trace_handles(
                     spec, as_map_fn(usecase), mesh, seg_tasks=seg_tasks,
                     tag=f"{bname}/{cname}{suffix}"))
+            if getattr(backend, "supports_coded", False) \
+                    and n_procs % 2 == 0:
+                # the coded exchange (JobSpec.code_rate=2): r-replicated
+                # column blocks + the XOR multicast step — a distinct
+                # compiled program that must hold the same replication
+                # contract. Gated on an even mesh (code groups need
+                # r | n_procs): the in-process P=1 run skips it, the
+                # P=8 CI analysis job covers it.
+                for stealing, suffix in ((False, "+coded"),
+                                         (True, "+steal+coded")):
+                    spec = JobSpec(vocab=usecase.window, task_size=8,
+                                   push_cap=16, n_procs=n_procs,
+                                   segment=seg_tasks, stealing=stealing,
+                                   code_rate=2)
+                    handles.extend(backend.trace_handles(
+                        spec, as_map_fn(usecase), mesh,
+                        seg_tasks=seg_tasks,
+                        tag=f"{bname}/{cname}{suffix}"))
             if getattr(backend, "supports_coschedule", False):
                 # the co-scheduled engine: a 2-member WorkDomain's
                 # composite program — key-window offsetting plus the
@@ -317,6 +335,33 @@ def _rep001_crossjob(fires: bool) -> ProgramHandle:
         bad if fires else near, mesh, replicated_out=("total",))
 
 
+def _rep001_coded(fires: bool) -> ProgramHandle:
+    # the coded-exchange failure mode: the decoded-bucket total each
+    # rank recovers from the XOR multicast is per-rank partial state —
+    # only a psum turns it into the asserted-replicated fleet total.
+    # The bad twin feeds the decode accumulator around the ring instead:
+    # ppermute is a shuffle, not a replication (every rank ends holding
+    # a *different* decoded partial), so REP001 fires.
+    mesh = procs_mesh(1)
+    n = int(mesh.devices.size)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+
+    def _decoded_total(x):
+        # XOR a received coded row against locally-mapped side info
+        dec = jnp.bitwise_xor(x[0], x[-1])
+        return dec.sum()
+
+    def bad(x):
+        return lax.ppermute(_decoded_total(x)[None], "procs", perm)
+
+    def near(x):
+        return lax.psum(_decoded_total(x), "procs")[None]
+
+    return _sm_handle(
+        f"mutant/rep001-coded/{'bad' if fires else 'near'}",
+        bad if fires else near, mesh, replicated_out=("total",))
+
+
 def _copy_kernel(x_ref, o_ref):
     o_ref[...] = x_ref[...]
 
@@ -425,6 +470,10 @@ MUTANTS = (
            lambda: _rep001_crossjob(True)),
     Mutant("rep001-crossjob-near", "REP001", False, "program",
            lambda: _rep001_crossjob(False)),
+    Mutant("rep001-coded-bad", "REP001", True, "program",
+           lambda: _rep001_coded(True)),
+    Mutant("rep001-coded-near", "REP001", False, "program",
+           lambda: _rep001_coded(False)),
     Mutant("pal001-bad", "PAL001", True, "kernel",
            lambda: _pal001(True)),
     Mutant("pal001-near", "PAL001", False, "kernel",

@@ -1,0 +1,101 @@
+"""Coded shuffle — r-replicated assignment grids for the XOR multicast.
+
+Coded MapReduce (PAPERS.md, arXiv 1512.01625) trades replicated map
+work for shuffle bytes: when every map task runs on r ranks, the ranks
+of an r-group share enough side information that one XOR-coded block
+per step replaces the r-1 unicast bucket transfers inside the group,
+cutting push-shuffle traffic toward 1/r.
+
+This module holds the host-side half of ``JobConfig(code_rate=r)``:
+
+  * **code groups** — ranks are grouped into P/r consecutive groups;
+    ``group = rank // r``, ``member = rank % r``. ``n_procs`` must be
+    divisible by ``code_rate`` (enforced by ``JobSpec.__post_init__``).
+  * **replicated grids** (:func:`replicate_grids`) — the r=1 planner
+    grid (P, T) becomes (P, T*r): column block k of every member of
+    group g holds the *same* r-wide block — the group's members' r=1
+    tasks at column k. The engine scan consumes one block per step
+    (same step count as r=1, r× map compute per step), so Combine's
+    dup-sum keeps the result record-identical to the solo run.
+  * **bytes model** (:func:`shuffle_bytes`) — the deterministic
+    bytes-on-the-wire accounting ``benchmarks/fig15_coded.py`` states
+    the win with. The coded intra-group block is counted ONCE per step
+    (multicast convention, as in the Coded MapReduce literature);
+    inter-group buckets are deduplicated to a single speaker each.
+
+The device-side half (the XOR encode/decode itself) is
+``repro.distributed.collectives.coded_exchange``; the engine step that
+consumes these grids is ``repro.core.onesided._coded_step``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+# one shuffled record on the wire: int32 key + int32 value
+RECORD_BYTES = 8
+
+
+def group_of(rank: int, code_rate: int) -> int:
+    """Code group of ``rank`` (r consecutive ranks per group)."""
+    return rank // code_rate
+
+
+def member_of(rank: int, code_rate: int) -> int:
+    """Member slot of ``rank`` inside its code group."""
+    return rank % code_rate
+
+
+def replicate_grids(task_ids, repeats, code_rate: int):
+    """Replicate an r=1 assignment onto r-rank code groups.
+
+    ``task_ids``/``repeats`` are the planner's (P, T) grids. Returns
+    (P, T*r) grids in which every member of group g carries the
+    identical row: T column blocks of width r, block k holding the
+    group's members' original column-k tasks ``[ids[g*r+0, k], ...,
+    ids[g*r+r-1, k]]`` (repeats travel with their task). Padding ids
+    (-1) replicate like real tasks — a block is partially padded when
+    the r=1 grid was.
+    """
+    ids = np.asarray(task_ids, np.int32)
+    reps = np.asarray(repeats, np.int32)
+    r = int(code_rate)
+    if r <= 1:
+        return ids, reps
+    P, T = ids.shape
+    if P % r:
+        raise ValueError(
+            f"code_rate={r} needs n_procs divisible into r-rank code "
+            f"groups (got n_procs={P})")
+    out_ids = np.empty((P, T * r), np.int32)
+    out_reps = np.empty((P, T * r), np.int32)
+    for g in range(P // r):
+        rows = slice(g * r, (g + 1) * r)
+        # (r, T) -> (T, r) -> row-major flatten = [block 0 | block 1 | ...]
+        out_ids[rows] = ids[rows, :].T.reshape(1, T * r)
+        out_reps[rows] = reps[rows, :].T.reshape(1, T * r)
+    return out_ids, out_reps
+
+
+def shuffle_blocks_per_step(n_procs: int, code_rate: int) -> int:
+    """Logical push-shuffle payload blocks one rank puts on the wire per
+    engine step.
+
+    r=1: one unicast bucket per peer (the self row never travels).
+    r>1: ONE coded intra-group multicast block (counted once) plus one
+    unicast bucket per inter-group destination this member *speaks* for
+    (destination q is spoken for by member q % r of every other group —
+    the dedup that keeps the dup-sum exact).
+    """
+    P, r = int(n_procs), int(code_rate)
+    if r <= 1:
+        return P - 1
+    return 1 + (P // r - 1)
+
+
+def shuffle_bytes(n_procs: int, steps: int, push_cap: int,
+                  code_rate: int) -> int:
+    """Total push-shuffle bytes on the wire for a run of ``steps`` engine
+    steps (fixed-capacity buckets, as the engine actually ships them)."""
+    return (int(n_procs) * int(steps)
+            * shuffle_blocks_per_step(n_procs, code_rate)
+            * int(push_cap) * RECORD_BYTES)

@@ -42,7 +42,7 @@ from typing import Any
 
 import numpy as np
 
-from repro.core import planner
+from repro.core import coded, planner
 from repro.core.kv import KEY_SENTINEL
 from repro.core.partition import (Partitioner, resolve_partitioner,
                                   sample_key_histogram)
@@ -79,6 +79,14 @@ class JobConfig:
                               #   the default unfused path; see the
                               #   README "Fused hot path" section for
                               #   when it wins
+    code_rate: int = 1        # coded shuffle (core/coded.py): every map
+                              #   task runs on r consecutive ranks and
+                              #   the intra-group bucket push becomes
+                              #   one XOR-coded multicast block — r×
+                              #   map compute for ~1/r shuffle bytes.
+                              #   Needs n_procs divisible by r; 1 is
+                              #   today's path, bit-identical. See the
+                              #   README "Coded shuffle" section.
 
 
 @dataclass(frozen=True)
@@ -161,13 +169,19 @@ def submit(config: JobConfig, dataset, *, mesh=None, repeats=None,
             f"backend {config.backend!r} does not implement the fused "
             "map hot path (no supports_fused_map attribute) — drop "
             "fused_map=True or use backend '1s'")
+    if config.code_rate > 1 and not getattr(backend, "supports_coded",
+                                            False):
+        raise ValueError(
+            f"backend {config.backend!r} does not implement the coded "
+            "exchange (no supports_coded attribute) — drop code_rate or "
+            "use backend '1s'")
     partitioner = resolve_partitioner(config.partitioner)  # fail fast too
     window = config.window or config.usecase.window
     spec = JobSpec(vocab=window, task_size=config.task_size,
                    push_cap=config.push_cap, n_procs=config.n_procs,
                    combine_capacity=config.combine_capacity,
                    segment=config.segment, stealing=config.stealing,
-                   fused_map=config.fused_map,
+                   fused_map=config.fused_map, code_rate=config.code_rate,
                    partitioner=partitioner.name)
     from repro.distributed.mesh import local_mesh
     if mesh is None:
@@ -180,10 +194,17 @@ def submit(config: JobConfig, dataset, *, mesh=None, repeats=None,
     if repeats is None:
         repeats = np.ones((config.n_procs, T), np.int32)
     repeats = np.asarray(repeats, np.int32).reshape(config.n_procs, T)
+    seg_tasks = config.segment if config.segment > 0 else max(T, 1)
+    if config.code_rate > 1:
+        # every member of an r-rank code group carries the group's tasks
+        # as r-wide column blocks (core/coded.py); a segment of N blocks
+        # is N*r grid columns, so the engine still advances N steps
+        task_ids, repeats = coded.replicate_grids(task_ids, repeats,
+                                                  config.code_rate)
+        seg_tasks *= config.code_rate
     from jax.sharding import NamedSharding, PartitionSpec
     feed = SegmentFeed(
-        source, plan, task_ids, repeats,
-        segment=config.segment if config.segment > 0 else max(T, 1),
+        source, plan, task_ids, repeats, segment=seg_tasks,
         sharding=NamedSharding(mesh, PartitionSpec(AXIS)),
         prefetch=prefetch, budget=feed_budget)
     return JobHandle(config, backend, spec, mesh, plan, feed, partitioner)
@@ -367,6 +388,12 @@ class JobHandle:
         (from ``repro.ft.straggler``); each task keeps its compute-repeat
         factor, so results stay exact by construction."""
         self._ensure_segmented()
+        if self.spec.code_rate > 1:
+            raise ValueError(
+                "replan() does not support coded jobs (code_rate > 1): "
+                "the r-replicated grid intentionally repeats every task "
+                "r times, which the feed's exactly-once coverage "
+                "contract rejects; resubmit the job instead")
         grid = np.asarray(task_id_grid, np.int32)
         by_task = {int(t): int(r) for t, r in
                    zip(self.feed.task_ids_grid.ravel(),
@@ -404,6 +431,9 @@ class JobHandle:
                    # hot paths are bit-identical and share carry shapes,
                    # so snapshots interchange freely across the flag
                    "fused_map": self.spec.fused_map,
+                   # the saved grids are r-replicated column blocks for
+                   # coded jobs — meaningless under a different r
+                   "code_rate": self.spec.code_rate,
                    "partitioner": self.spec.partitioner,
                    "task_ids": self.feed.task_ids_grid.tolist(),
                    "repeats": self.feed.repeats_grid.tolist()})
@@ -443,6 +473,15 @@ class JobHandle:
                 f"coslots={self.spec.coslots} handle would misroute the "
                 "composite task/key space; re-form the WorkDomain with "
                 "the same member jobs first")
+        saved_rate = extra.get("code_rate")
+        if (saved_rate is not None
+                and int(saved_rate) != self.spec.code_rate):
+            raise ValueError(
+                f"checkpoint step {found} was taken with "
+                f"code_rate={int(saved_rate)} — restoring into a "
+                f"code_rate={self.spec.code_rate} handle would break the "
+                "r-replicated assignment the snapshot's grids encode; "
+                f"resubmit with JobConfig(code_rate={int(saved_rate)})")
         saved_part = extra.get("partitioner")
         if saved_part is not None and saved_part != self.spec.partitioner:
             raise ValueError(

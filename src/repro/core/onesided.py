@@ -32,13 +32,15 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.combine import tree_combine
-from repro.core.kv import KEY_SENTINEL, bucketize, local_reduce_repeated
+from repro.core.kv import (KEY_SENTINEL, bucketize, local_reduce,
+                           local_reduce_repeated)
 from repro.core.partition import lookup_owner
 from repro.core.registry import JobSpec, memoized, register_backend
 from repro.core.windows import (AXIS, DenseWindow, EngineCarry,
                                 STATUS_REDUCE, combine_records, init_carry,
                                 wrap_segment_fns)
-from repro.distributed.collectives import all_to_all_blocks, shard_map
+from repro.distributed.collectives import (all_to_all_blocks, coded_exchange,
+                                           shard_map)
 from repro.kernels.fused_map.ops import fused_map_step
 
 
@@ -97,6 +99,51 @@ def _step(spec: JobSpec, map_fn: Callable, carry: EngineCarry, xs):
                                       carry.pending_v.reshape(-1))
     # ownership transfer for overflowed records: keep them locally
     win = win.put(ofk, ofv)
+    return carry._replace(table=win.table, pending_k=rk, pending_v=rv,
+                          cursor=carry.cursor + 1), counts
+
+
+def _coded_step(spec: JobSpec, map_fn: Callable, carry: EngineCarry, xs):
+    """One step of the r-replicated coded engine (``code_rate`` r > 1).
+
+    The scan consumes one r-wide COLUMN BLOCK per step: every member of
+    an r-rank code group holds the identical block (the group's members'
+    r=1 tasks at this column, ``core/coded.py``), maps all r tasks (the
+    r× compute the coded trade pays), unions the emissions under the
+    local-reduce dup-sum, and replaces the r-1 intra-group unicast
+    bucket rows with ONE XOR-coded multicast block
+    (``distributed/collectives.coded_exchange``). Exactness: each
+    record folds exactly once fleet-wide — one speaker per inter-group
+    destination, one designated-peer decode per intra-group destination,
+    one rotating member retaining the bucket overflow — and the Combine
+    dup-sum makes the result independent of where records fold, the
+    same argument that covers stealing at r=1.
+    """
+    task, task_id, rep = xs            # (r, S), (r,), (r,)
+    P, cap, r = spec.n_procs, spec.push_cap, spec.code_rate
+    me = lax.axis_index(AXIS)
+    # Phases I+II per replica task, then union under the dup-sum
+    ks, vs = [], []
+    for j in range(r):
+        keys, vals = map_fn(task[j], task_id[j], rep[j])
+        uk, uv = local_reduce_repeated(keys, vals, keys.shape[0], rep[j])
+        ks.append(uk)
+        vs.append(uv)
+    uk, uv, _ = local_reduce(jnp.concatenate(ks), jnp.concatenate(vs),
+                             r * spec.task_size)
+    # the block's first id picks split replicas for the whole union: any
+    # group-replicated choice is exact (dup-sum locality independence)
+    owners = lookup_owner(carry.owner_map, carry.owner_split, uk,
+                          task_id[0], P)
+    bk, bv, counts, (ofk, ofv) = bucketize(uk, uv, P, cap, owners=owners)
+    rk, rv = coded_exchange(bk, bv, AXIS, r)
+    win = DenseWindow(carry.table).put(carry.pending_k.reshape(-1),
+                                      carry.pending_v.reshape(-1))
+    # overflow: all members hold the identical union overflow — exactly
+    # one (cursor-rotating) member of each group folds it
+    keep = (carry.cursor % r) == (me % r)
+    win = win.put(jnp.where(keep, ofk, KEY_SENTINEL),
+                  jnp.where(keep, ofv, 0))
     return carry._replace(table=win.table, pending_k=rk, pending_v=rv,
                           cursor=carry.cursor + 1), counts
 
@@ -169,6 +216,73 @@ def _steal_segment(spec: JobSpec, map_fn: Callable, carry: EngineCarry,
     return carry
 
 
+def _coded_steal_segment(spec: JobSpec, map_fn: Callable,
+                         carry: EngineCarry, tok, tid, rep) -> EngineCarry:
+    """Work stealing over r-replicated grids: claims move whole r-wide
+    column blocks between GROUPS (G = P/r super-ranks of the same pure
+    claim function), so a stolen block lands on all r members of the
+    claimant group and its code group stays decodable. Member m of the
+    victim group serves member m of each claimant group the full
+    ``(r, S+2)`` block through the same fixed-shape all_to_all get as
+    the r=1 steal path.
+    """
+    from repro.core import steal
+    P, S, r = spec.n_procs, spec.task_size, spec.code_rate
+    G = P // r
+    me = lax.axis_index(AXIS)
+    g, m = me // r, me % r
+    # block-granular views of the segment: (W, S) -> (W//r, r, S)
+    n_blk = tok.shape[0] // r
+    tok = tok.reshape(n_blk, r, S)
+    tid = tid.reshape(n_blk, r)
+    rep = rep.reshape(n_blk, r)
+    # real blocks first (any live sub-task keeps a block claimable)
+    blk_valid = (tid >= 0).any(axis=1)
+    perm = jnp.argsort(~blk_valid)
+    tok, tid, rep = tok[perm], tid[perm], rep[perm]
+    # group deques: every member holds the identical grid row, so the
+    # one-hot psum over groups counts each block r times — divide out
+    count = blk_valid.sum().astype(jnp.int32)
+    tail = lax.psum(jnp.where(jnp.arange(G) == g, count, 0), AXIS) // r
+    head = jnp.zeros_like(tail)
+    onehot = jnp.arange(P) == me
+    e_grp = jnp.arange(P) // r
+    e_mem = jnp.arange(P) % r
+
+    def step(state, _):
+        carry, head, tail = state
+        # per-group work row: members of a group accrue identically
+        gwork = carry.work.reshape(G, r)[:, 0]
+        src_grp, src_col, head, tail = steal.claim_step(head, tail, gwork)
+        mine = (src_grp[e_grp] == g) & (e_mem == m)
+        cols = jnp.where(mine, src_col[e_grp], 0)
+        served = jnp.concatenate(
+            [jnp.where(mine[:, None], tok[cols].reshape(P, r * S),
+                       KEY_SENTINEL),
+             jnp.where(mine[:, None], tid[cols], -1),
+             jnp.where(mine[:, None], rep[cols], 0)], axis=1)
+        got = all_to_all_blocks(served, AXIS)
+        src = src_grp[g]
+        row = got[jnp.maximum(src * r + m, 0)]
+        live = src >= 0
+        task = jnp.where(live, row[:r * S], KEY_SENTINEL).reshape(r, S)
+        t_id = jnp.where(live, row[r * S:r * S + r], -1)
+        t_rep = jnp.where(live, row[r * S + r:], 0)
+        done = jnp.where(t_id >= 0, t_rep, 0).sum()
+        carry = carry._replace(
+            work=carry.work + lax.psum(
+                jnp.where(onehot & live, done, 0), AXIS),
+            stolen=carry.stolen + lax.psum(
+                jnp.where(onehot & live & (src != g), 1, 0), AXIS))
+        carry, _ = _coded_step(spec, map_fn, carry,
+                               (task, t_id, jnp.maximum(t_rep, 1)))
+        return (carry, head, tail), None
+
+    (carry, _, _), _ = lax.scan(step, (carry, head, tail), None,
+                                length=n_blk)
+    return carry
+
+
 def _shard_spec():
     from jax.sharding import PartitionSpec as P
     return P(AXIS)
@@ -178,7 +292,18 @@ def _engine(spec: JobSpec, map_fn: Callable, tokens, task_ids, repeats):
     """Per-shard engine body. tokens: (1, T, S); task_ids/repeats: (1, T)."""
     tokens, task_ids, repeats = tokens[0], task_ids[0], repeats[0]
     carry = init_carry(spec)
-    if spec.stealing:
+    if spec.code_rate > 1:
+        if spec.stealing:
+            carry = _coded_steal_segment(spec, map_fn, carry, tokens,
+                                         task_ids, repeats)
+        else:
+            r = spec.code_rate
+            nb = task_ids.shape[0] // r
+            carry, _ = lax.scan(
+                partial(_coded_step, spec, map_fn), carry,
+                (tokens.reshape(nb, r, -1), task_ids.reshape(nb, r),
+                 repeats.reshape(nb, r)))
+    elif spec.stealing:
         carry = _steal_segment(spec, map_fn, carry, tokens, task_ids,
                                repeats)
     else:
@@ -208,6 +333,10 @@ class OneSidedBackend:
     # program-compatible jobs, core/workdomain.py). The scheduler only
     # forms WorkDomains over backends advertising this.
     supports_coschedule = True
+    # ... and JobSpec.code_rate > 1 (the r-replicated coded shuffle:
+    # core/coded.py grids + the XOR multicast exchange), gated by
+    # submit() like the other capability flags
+    supports_coded = True
 
     def __init__(self):
         self._programs: dict = {}
@@ -246,7 +375,26 @@ class OneSidedBackend:
                         lambda: self._build_segment_fns(spec, map_fn, mesh))
 
     def _build_segment_fns(self, spec: JobSpec, map_fn: Callable, mesh):
-        if spec.stealing:
+        if spec.code_rate > 1:
+            # the coded engine consumes r-wide column blocks: the feed
+            # hands segments whose width is a multiple of r (submit()
+            # scales the segment), re-blocked here for the scan
+            if spec.stealing:
+                def seg(carry, tok, tid, rep):
+                    assert tok.shape[0] % spec.code_rate == 0, tok.shape
+                    return _coded_steal_segment(spec, map_fn, carry, tok,
+                                                tid, rep)
+            else:
+                def seg(carry, tok, tid, rep):
+                    r = spec.code_rate
+                    assert tok.shape[0] % r == 0, tok.shape
+                    nb = tok.shape[0] // r
+                    carry, _ = lax.scan(
+                        partial(_coded_step, spec, map_fn), carry,
+                        (tok.reshape(nb, r, -1), tid.reshape(nb, r),
+                         rep.reshape(nb, r)))
+                    return carry
+        elif spec.stealing:
             seg = partial(_steal_segment, spec, map_fn)
         else:
             def seg(carry, tok, tid, rep):

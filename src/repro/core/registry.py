@@ -54,6 +54,16 @@ class JobSpec:
                                  #   comparing field: it selects a different
                                  #   compiled program, unlike the
                                  #   carry-data ``partitioner`` tag.
+    code_rate: int = 1           # r-replicated coded shuffle (core/coded.py
+                                 #   + distributed/collectives.coded_exchange):
+                                 #   every map task runs on r consecutive
+                                 #   ranks and the intra-group bucket push is
+                                 #   one XOR-coded multicast block instead of
+                                 #   r-1 unicasts. 1 = today's path,
+                                 #   bit-identical. A comparing field: the
+                                 #   coded step is a different compiled
+                                 #   program. Only engines advertising
+                                 #   ``supports_coded`` honor r > 1.
     # cross-job co-scheduling (core/workdomain.py): a WorkDomain merges
     # K program-compatible jobs into ONE engine program over a composite
     # task/key space. ``coslots`` is K (1 = ordinary solo job) and
@@ -76,6 +86,23 @@ class JobSpec:
     def __post_init__(self):
         if not self.combine_capacity:
             object.__setattr__(self, "combine_capacity", self.vocab)
+        if self.code_rate < 1:
+            raise ValueError(f"code_rate must be >= 1, got {self.code_rate}")
+        if self.code_rate > 1:
+            if self.n_procs % self.code_rate:
+                raise ValueError(
+                    f"code_rate={self.code_rate} needs n_procs divisible "
+                    f"into r-rank code groups (got n_procs={self.n_procs})")
+            if self.fused_map:
+                raise ValueError(
+                    "fused_map does not compose with the coded exchange "
+                    "(code_rate > 1) — the fused kernel pushes per-task "
+                    "unicast buckets; run coded jobs unfused")
+            if self.coslots > 1:
+                raise ValueError(
+                    "co-scheduling (coslots > 1) does not compose with "
+                    "code_rate > 1 — the fleet cursor claims single task "
+                    "slots, which would break the r-group decode")
         if self.coslots > 1:
             if self.fused_map:
                 # the fused kernel resolves owners in-kernel over the

@@ -81,14 +81,16 @@ def coschedule_key(handle: JobHandle) -> tuple:
 
 
 def can_coschedule(handle: JobHandle) -> bool:
-    """Whether this job may join a WorkDomain. Fused jobs and sampling
-    partitioners cleanly reject (solo slicing instead): the fused kernel
-    has no composite-key path, and a sampled owner map is built per-job
-    over the solo key space."""
+    """Whether this job may join a WorkDomain. Fused/coded jobs and
+    sampling partitioners cleanly reject (solo slicing instead): the
+    fused kernel has no composite-key path, the coded exchange's r-group
+    decode has no fleet-cursor claim granularity, and a sampled owner
+    map is built per-job over the solo key space."""
     spec = handle.spec
     return (getattr(handle.backend, "supports_coschedule", False)
             and spec.coslots == 1
             and not spec.fused_map
+            and spec.code_rate == 1
             and not handle.partitioner.needs_sample
             and handle.config.segment > 0
             and handle.cursor == 0
@@ -117,8 +119,8 @@ class WorkDomain:
             if not can_coschedule(h):
                 raise ValueError(
                     "job is not co-schedulable (backend without "
-                    "supports_coschedule, fused_map, sampling "
-                    "partitioner, oneshot, or already started)")
+                    "supports_coschedule, fused_map, code_rate > 1, "
+                    "sampling partitioner, oneshot, or already started)")
             if coschedule_key(h) != key0:
                 raise ValueError(
                     "WorkDomain members must share one compiled program "

@@ -64,6 +64,67 @@ def all_to_all_blocks(x: jnp.ndarray, axis: str) -> jnp.ndarray:
     return lax.all_to_all(x, axis, split_axis=0, concat_axis=0, tiled=False)
 
 
+def coded_exchange(bk: jnp.ndarray, bv: jnp.ndarray, axis: str,
+                   code_rate: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One XOR-coded multicast step of the bucket shuffle (Coded
+    MapReduce, arXiv 1512.01625; host half in ``repro.core.coded``).
+
+    ``bk``/``bv`` are the (P, cap) per-destination buckets that every
+    member of an r-rank code group computed *identically* (the group
+    maps the same replicated task block). Instead of unicasting r-1
+    bucket rows to its group peers, each member ships ONE coded block —
+    the XOR of the buckets destined for its peers — and each receiver
+    decodes its own bucket from its designated peer's block by XOR-ing
+    back the side information it mapped locally. Inter-group rows are
+    deduplicated to a single speaker per destination (member ``q % r``
+    of every group speaks for destination ``q``), so with the Combine
+    dup-sum each record still folds exactly once fleet-wide.
+
+    Returns the (P, cap) pending rows ready to fold: the decoded bucket
+    on the designated-peer row, speaker buckets as received, and every
+    other row (raw coded blocks, the self row, silent non-speakers)
+    cleared to sentinel-empty.
+    """
+    from functools import reduce
+
+    from repro.core.kv import KEY_SENTINEL
+    r = int(code_rate)
+    P = axis_size(axis)
+    assert r > 1 and P % r == 0, (P, r)
+    me = lax.axis_index(axis)
+    g, m = me // r, me % r
+    q = jnp.arange(P)
+    in_group = (q // r) == g
+    peer = in_group & (q != me)
+
+    def _xor(x, mask):
+        rows = jnp.where(mask[:, None], x, 0)
+        return reduce(jnp.bitwise_xor, [rows[i] for i in range(P)])
+
+    # encode: X = XOR of the buckets destined for my r-1 group peers
+    xk, xv = _xor(bk, peer), _xor(bv, peer)
+    speak = (~in_group) & ((q % r) == m)
+    sk = jnp.where(peer[:, None], xk[None, :],
+                   jnp.where(speak[:, None], bk, KEY_SENTINEL))
+    sv = jnp.where(peer[:, None], xv[None, :],
+                   jnp.where(speak[:, None], bv, 0))
+    gk = all_to_all_blocks(sk, axis)
+    gv = all_to_all_blocks(sv, axis)
+    # decode my bucket from the designated peer's coded block: its XOR
+    # covers the whole group but the sender, so XOR-ing the locally
+    # mapped buckets of everyone else leaves exactly the one for me
+    d = g * r + (m + 1) % r
+    side = in_group & (q != me) & (q != d)
+    dk = gk[d] ^ _xor(bk, side)
+    dv = gv[d] ^ _xor(bv, side)
+    is_d = (q == d)[:, None]
+    rk = jnp.where(in_group[:, None],
+                   jnp.where(is_d, dk[None, :], KEY_SENTINEL), gk)
+    rv = jnp.where(in_group[:, None],
+                   jnp.where(is_d, dv[None, :], 0), gv)
+    return rk, rv
+
+
 def ring_send_right(x: jnp.ndarray, axis: str, shift: int = 1) -> jnp.ndarray:
     P = axis_size(axis)
     perm = [(i, (i + shift) % P) for i in range(P)]

@@ -89,6 +89,19 @@ FIG14 = {
                  "crossjob_stealing_active": True,
                  "one_domain_per_fleet": True},
 }
+FIG15 = {
+    "skews": [0.0, 1.6], "code_rates": [1, 2, 3],
+    "real": {"P": 6, "per_skew": {"1.6": {}}},
+    "bytes": {"per_step_blocks": {"1": 5, "2": 3, "3": 2},
+              "shuffle_ratio_at_max_skew": {"2": 0.6, "3": 0.4}},
+    "criteria": {"shuffle_ratio_r2_at_max_skew": 0.6,
+                 "shuffle_ratio_r3_at_max_skew": 0.4,
+                 "bytes_win_r2_pct": 40.0,
+                 "bytes_win_r3_pct": 60.0,
+                 "r2_le_065_at_max_skew": True,
+                 "records_equal": True,
+                 "oracle_exact": True},
+}
 
 
 @pytest.fixture()
@@ -99,9 +112,10 @@ def dirs(tmp_path):
     baseline.mkdir()
 
     def write(fig8=FIG8, fig9=FIG9, fig10=FIG10, fig11=FIG11,
-              fig12=FIG12, fig13=FIG13, fig14=FIG14, fresh_fig8=None,
-              fresh_fig9=None, fresh_fig10=None, fresh_fig11=None,
-              fresh_fig12=None, fresh_fig13=None, fresh_fig14=None):
+              fig12=FIG12, fig13=FIG13, fig14=FIG14, fig15=FIG15,
+              fresh_fig8=None, fresh_fig9=None, fresh_fig10=None,
+              fresh_fig11=None, fresh_fig12=None, fresh_fig13=None,
+              fresh_fig14=None, fresh_fig15=None):
         (baseline / "BENCH_io_overlap.json").write_text(json.dumps(fig8))
         (baseline / "BENCH_imbalance.json").write_text(json.dumps(fig9))
         (baseline / "BENCH_keyskew.json").write_text(json.dumps(fig10))
@@ -109,6 +123,7 @@ def dirs(tmp_path):
         (baseline / "BENCH_roofline.json").write_text(json.dumps(fig12))
         (baseline / "BENCH_elastic.json").write_text(json.dumps(fig13))
         (baseline / "BENCH_crossjob.json").write_text(json.dumps(fig14))
+        (baseline / "BENCH_coded.json").write_text(json.dumps(fig15))
         (results / "fig8_io_overlap.json").write_text(
             json.dumps(fresh_fig8 if fresh_fig8 is not None else fig8))
         (results / "fig9_imbalance.json").write_text(
@@ -123,6 +138,8 @@ def dirs(tmp_path):
             json.dumps(fresh_fig13 if fresh_fig13 is not None else fig13))
         (results / "fig14_crossjob.json").write_text(
             json.dumps(fresh_fig14 if fresh_fig14 is not None else fig14))
+        (results / "fig15_coded.json").write_text(
+            json.dumps(fresh_fig15 if fresh_fig15 is not None else fig15))
 
     return str(results), str(baseline), write
 
@@ -137,8 +154,9 @@ def test_clean_artifacts_pass(dirs):
     assert check("fig12", results, baseline) == []
     assert check("fig13", results, baseline) == []
     assert check("fig14", results, baseline) == []
+    assert check("fig15", results, baseline) == []
     assert main(["fig8", "fig9", "fig10", "fig11", "fig12", "fig13",
-                 "fig14", "--results", results, "--baseline",
+                 "fig14", "fig15", "--results", results, "--baseline",
                  baseline]) == 0
 
 
@@ -371,6 +389,50 @@ def test_fig14_gates(dirs):
     write(fresh_fig14=idle)
     assert any("crossjob_stealing_active" in e
                for e in check("fig14", results, baseline))
+
+
+def test_fig15_gates(dirs):
+    """The coded-shuffle guard: the r=2 bytes win may shrink at most
+    10pp below baseline (40); the 0.65x acceptance ratio, record
+    identity with r=1, and oracle exactness are hard-required."""
+    results, baseline, write = dirs
+    ok = copy.deepcopy(FIG15)
+    ok["criteria"]["bytes_win_r2_pct"] = 32.0    # within 10pp of 40
+    write(fresh_fig15=ok)
+    assert check("fig15", results, baseline) == []
+    shrunk = copy.deepcopy(FIG15)
+    shrunk["criteria"]["bytes_win_r2_pct"] = 25.0   # breach
+    write(fresh_fig15=shrunk)
+    assert any("bytes_win_r2_pct" in e
+               for e in check("fig15", results, baseline))
+    # the acceptance headline is hard-required: r=2 must keep shuffle
+    # bytes at or under 0.65x the r=1 reference
+    over = copy.deepcopy(FIG15)
+    over["criteria"]["r2_le_065_at_max_skew"] = False
+    write(fresh_fig15=over)
+    assert any("r2_le_065_at_max_skew" in e and "expected true" in e
+               for e in check("fig15", results, baseline))
+    # a coded run diverging from the r=1 records (or the host oracle)
+    # is the one unforgivable regression
+    inexact = copy.deepcopy(FIG15)
+    inexact["criteria"]["records_equal"] = False
+    write(fresh_fig15=inexact)
+    assert any("records_equal" in e and "expected true" in e
+               for e in check("fig15", results, baseline))
+
+
+def test_fig15_bytes_floor_is_absolute(dirs):
+    """The bytes-win floor is baseline-independent: a silently-
+    degenerate r=1 fallback (coded path not engaging, 0% win) fails
+    even against a baseline that recorded the same degeneracy."""
+    results, baseline, write = dirs
+    flat_base = copy.deepcopy(FIG15)
+    flat_base["criteria"]["bytes_win_r2_pct"] = 0.0
+    flat = copy.deepcopy(FIG15)
+    flat["criteria"]["bytes_win_r2_pct"] = 0.0
+    write(fig15=flat_base, fresh_fig15=flat)
+    errs = check("fig15", results, baseline)
+    assert any("bytes_win_r2_pct" in e and "floor" in e for e in errs)
 
 
 def test_fig11_fairness_floor_is_absolute(dirs):
